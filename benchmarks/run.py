@@ -1,0 +1,326 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call = wall time of
+the operation benchmarked; derived = the figure's headline metric) and
+writes a JSON report to results/bench_report.json for EXPERIMENTS.md.
+
+  fig2_exponential_fits   — Alg 2 database fit quality on the in-house grid
+  fig3_param_prediction   — Alg 3 extrapolation to held-out (ii,oo) groups
+  fig6_rq1_training_sets  — RQ1: 4 training-set designs -> error dists
+  fig7_rq2_baselines      — RQ2: ALA vs LR/XGB/RF/GB (+ SA trajectory,
+                            runtime scaling)
+  fig8_rq3_model_zoo      — RQ3: per-architecture error across the 10-arch
+                            suite dataset
+  table1_rq4_uncertainty  — RQ4: predicted error / confidence / actual,
+                            incl. the hardware-mismatch case
+  perf_vmapped_fit        — beyond-paper: batched-LM fit vs scalar numpy
+  perf_kernels            — kernel oracle timings (CPU reference path)
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+RESULTS = pathlib.Path(__file__).resolve().parent.parent / "results"
+REPORT: dict = {}
+_ROWS: list = []
+
+
+def _emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}")
+    _ROWS.append((name, us_per_call, derived))
+
+
+def _timed(fn, *a, **kw):
+    t0 = time.perf_counter()
+    out = fn(*a, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+# ---------------------------------------------------------------------------
+def _data():
+    from repro.bench.datasets import load_or_make, train_test_split
+    ds = load_or_make("inhouse")
+    return ds, train_test_split(ds, test_frac=0.3, seed=0)
+
+
+def fig2_exponential_fits():
+    from repro.core.ala import ALA
+    ds, (train, test) = _data()
+    ala, us = _timed(lambda: ALA().fit(*train.workload))
+    in_err = ala.score(*train.workload)
+    REPORT["fig2"] = {"db_groups": len(ala.db), "train_median_ape": in_err,
+                      "fit_db_s": ala.timings["fit_db_s"],
+                      "fit_predictor_s": ala.timings["fit_predictor_s"]}
+    _emit("fig2_exponential_fits", us,
+          f"groups={len(ala.db)};train_medAPE={in_err:.2f}%")
+    return ala, train, test
+
+
+def fig3_param_prediction():
+    """Hold out entire (ii,oo) groups; ML must extrapolate their params."""
+    from repro.core.ala import ALA
+    from repro.core.annealing import median_ape
+    ds, _ = _data()
+    ii, oo, bb, thpt = ds.workload
+    rng = np.random.default_rng(7)
+    pairs = np.unique(np.stack([ii, oo], 1), axis=0)
+    held = pairs[rng.choice(len(pairs), size=max(4, len(pairs) // 5),
+                            replace=False)]
+    hmask = np.zeros(len(ii), bool)
+    for p in held:
+        hmask |= (ii == p[0]) & (oo == p[1])
+    ala = ALA().fit(ii[~hmask], oo[~hmask], bb[~hmask], thpt[~hmask])
+    (pred, us) = _timed(ala.predict, ii[hmask], oo[hmask], bb[hmask])
+    err = median_ape(thpt[hmask], pred)
+    REPORT["fig3"] = {"held_groups": len(held), "unseen_median_ape": err}
+    _emit("fig3_param_prediction", us,
+          f"unseen_pairs_medAPE={err:.2f}%")
+
+
+def fig6_rq1_training_sets():
+    from repro.core.ala import ALA
+    from repro.bench.datasets import INHOUSE_BB, INHOUSE_II, INHOUSE_OO
+    ds, _ = _data()
+    ii, oo, bb, thpt = ds.workload
+    rng = np.random.default_rng(0)
+
+    def experiment_masks():
+        # Exp1: broad balanced coverage (uniform 50% of rows)
+        e1 = rng.random(len(ii)) < 0.5
+        # Exp2: dense clusters spread across the range, all bb incl. large
+        # (paper: "densely clustered metrics within specific regions")
+        e2 = (np.isin(ii, (INHOUSE_II[0], INHOUSE_II[1], INHOUSE_II[4],
+                           INHOUSE_II[7]))
+              & np.isin(oo, (INHOUSE_OO[0], INHOUSE_OO[1], INHOUSE_OO[4],
+                             INHOUSE_OO[5])))
+        # Exp3: no large batch sizes (bb <= 32)
+        e3 = bb <= 32
+        # Exp4: sparse across the whole range (every other value per dim)
+        e4 = (np.isin(ii, INHOUSE_II[::2]) & np.isin(oo, INHOUSE_OO[::2])
+              & np.isin(bb, INHOUSE_BB[::2]))
+        return {"exp1_broad": e1, "exp2_dense_clusters": e2,
+                "exp3_no_large_bb": e3, "exp4_sparse": e4}
+
+    out = {}
+    for name, m in experiment_masks().items():
+        ala, us = _timed(
+            lambda m=m: ALA().fit(ii[m], oo[m], bb[m], thpt[m]))
+        pred = ala.predict(ii[~m], oo[~m], bb[~m])
+        ape = np.abs(pred - thpt[~m]) / np.maximum(np.abs(thpt[~m]), 1e-9) \
+            * 100.0
+        stats = {"median": float(np.median(ape)),
+                 "p90": float(np.percentile(ape, 90)),
+                 "mean": float(ape.mean()), "n_train": int(m.sum()),
+                 "hist": np.histogram(np.clip(ape, 0, 100),
+                                      bins=20)[0].tolist()}
+        out[name] = stats
+        _emit(f"fig6_rq1_{name}", us,
+              f"medAPE={stats['median']:.2f}%;p90={stats['p90']:.1f}%")
+    REPORT["fig6_rq1"] = out
+
+
+def fig7_rq2_baselines(n_sa_iters: int = 40):
+    from repro.core.ala import ALA
+    from repro.core.annealing import (SAConfig, anneal, median_ape,
+                                      subset_mask)
+    from repro.core.baselines import make_baselines
+    ds, (train, test) = _data()
+
+    # (a) headline comparison on the train/test split
+    comp = {}
+    ala, us_ala = _timed(lambda: ALA().fit(*train.workload))
+    comp["ALA"] = {"median_ape": ala.score(*test.workload),
+                   "train_us": us_ala}
+    for name, bl in make_baselines().items():
+        _, us = _timed(bl.fit, *train.workload)
+        e = median_ape(test.workload[3], bl.predict(*test.workload[:3]))
+        comp[name] = {"median_ape": e, "train_us": us}
+        _emit(f"fig7_rq2_{name}", us, f"medAPE={e:.2f}%")
+    _emit("fig7_rq2_ALA", us_ala,
+          f"medAPE={comp['ALA']['median_ape']:.2f}%")
+
+    # (b) error over SA iterations: ALA vs baselines on the same subsets
+    sa_cfg = SAConfig(n_iters=n_sa_iters, seed=0,
+                      gbt_kw=dict(n_estimators=40, learning_rate=0.2,
+                                  max_depth=4))
+    log, us_sa = _timed(lambda: anneal(train.workload, test.workload,
+                                       sa_cfg))
+    ii, oo, bb, thpt = train.workload
+    tii, too, tbb, tthpt = test.workload
+    traj = {"ALA": list(map(float, log.errors))}
+    for name, bl in make_baselines().items():
+        errs = []
+        for s in log.subsets:
+            m = subset_mask(ii, oo, bb, s)
+            if m.sum() < 4:
+                errs.append(100.0)
+                continue
+            bl.fit(ii[m], oo[m], bb[m], thpt[m])
+            errs.append(float(median_ape(tthpt,
+                                         bl.predict(tii, too, tbb))))
+        traj[name] = errs
+    summary = {k: {"median": float(np.median(v)),
+                   "final": float(v[-1])} for k, v in traj.items()}
+    REPORT["fig7_rq2"] = {"comparison": comp,
+                          "sa_median_by_method": summary,
+                          "sa_trajectory": traj,
+                          "sa_us": us_sa, "n_iters": n_sa_iters}
+    _emit("fig7_rq2_sa_trajectory", us_sa,
+          ";".join(f"{k}={v['median']:.1f}%" for k, v in summary.items()))
+    return log
+
+
+def fig8_rq3_model_zoo():
+    from repro.core.registry import ModelRegistry
+    from repro.bench.datasets import load_or_make, train_test_split
+    suite = load_or_make("suite")
+    out = {}
+    us_total = 0.0
+    for arch in np.unique(suite["model"]):
+        sub = suite.filter(model=arch)
+        tr, te = train_test_split(sub, 0.3, seed=1)
+        reg = ModelRegistry()
+        _, us = _timed(reg.fit, tr, n_estimators=60, learning_rate=0.15)
+        us_total += us
+        pred = reg.predict(te)
+        ape = np.abs(pred - te["thpt"]) / np.maximum(te["thpt"], 1e-9) * 100
+        out[str(arch)] = {"median": float(np.median(ape)),
+                          "p90": float(np.percentile(ape, 90)),
+                          "n": int(len(te))}
+    REPORT["fig8_rq3"] = out
+    worst = max(out.items(), key=lambda kv: kv[1]["median"])
+    _emit("fig8_rq3_model_zoo", us_total,
+          f"archs={len(out)};median_range="
+          f"{min(v['median'] for v in out.values()):.1f}-"
+          f"{worst[1]['median']:.1f}%;worst={worst[0]}")
+
+
+def table1_rq4_uncertainty():
+    from repro.core.ala import ALA
+    from repro.core.annealing import SAConfig
+    from repro.bench.datasets import load_or_make
+    ds, (train, test) = _data()
+    ala = ALA()
+    ala.cfg.sa = SAConfig(n_iters=40, seed=3,
+                          gbt_kw=dict(n_estimators=40, learning_rate=0.2,
+                                      max_depth=4))
+    ala.fit(*train.workload)
+    ala.explore(test.workload)
+    ala.fit_error()
+
+    rows = {}
+
+    def case(name, data, actual_err):
+        (pe, conf), us = _timed(ala.estimate, data)
+        rows[name] = {"predicted_error": float(pe),
+                      "confidence": float(conf),
+                      "actual_error": float(actual_err)}
+        _emit(f"table1_rq4_{name}", us,
+              f"pred={pe:.2f}%;conf={conf:.2f};actual={actual_err:.2f}%")
+
+    # (1) same-model held-out subset (paper: "LLAMA Subset")
+    case("llama_subset", test.workload, ala.score(*test.workload))
+
+    # (2) different model family, same hardware (paper: Mistral 7B)
+    suite = load_or_make("suite")
+    other = suite.filter(model="llama3.2-3b", back="vllm-jax")
+    ow = other.workload
+    case("other_model_llama3.2-3b", ow, ala.score(*ow))
+
+    # (3) hardware mismatch (paper: Qwen2-7B on Intel PVC)
+    mis = load_or_make("mismatch")
+    mw = mis.workload
+    case("hw_mismatch_qwen_legacy", mw, ala.score(*mw))
+
+    REPORT["table1_rq4"] = rows
+
+
+def perf_vmapped_fit():
+    """Beyond-paper: one vmapped-LM XLA call vs a python loop of scalar
+    numpy LM fits (the scipy-curve_fit-style baseline)."""
+    from repro.core.expmodel import exp_model, initial_params
+    from repro.core.fit import fit_exponential_groups, fit_exponential_numpy
+    rng = np.random.default_rng(0)
+    groups = []
+    for g in range(512):
+        bbv = np.array([1, 2, 4, 8, 16, 32, 64, 128, 256], float)
+        a, b = rng.uniform(100, 5000), rng.uniform(0.01, 0.3)
+        c = rng.uniform(500, 20000)
+        y = exp_model(bbv, a, b, min(c + a, 30000)) \
+            * rng.lognormal(0, 0.03, len(bbv))
+        groups.append((bbv, y, initial_params(bbv, y)))
+    fit_exponential_groups(groups[:2])       # warm up compile
+    _, us_batch = _timed(fit_exponential_groups, groups)
+    t0 = time.perf_counter()
+    for g in groups:
+        fit_exponential_numpy(*g, iters=60)
+    us_loop = (time.perf_counter() - t0) * 1e6
+    REPORT["perf_vmapped_fit"] = {"groups": len(groups),
+                                  "batched_us": us_batch,
+                                  "loop_us": us_loop,
+                                  "speedup": us_loop / max(us_batch, 1e-9)}
+    _emit("perf_vmapped_fit", us_batch,
+          f"speedup_vs_scalar_loop={us_loop / max(us_batch, 1e-9):.1f}x")
+
+
+def perf_kernels():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.flash_attention import ops as fa
+    from repro.kernels.decode_attention import ops as da
+    from repro.kernels.rmsnorm import ops as rms
+    from repro.kernels.gbt_hist import ops as gh
+
+    key = jax.random.key(0)
+    q = jax.random.normal(key, (1, 1024, 8, 64), jnp.float32)
+    k = jax.random.normal(key, (1, 1024, 2, 64), jnp.float32)
+    x = jax.random.normal(key, (4096, 1024), jnp.float32)
+    scale = jnp.ones((1024,))
+    bins = jax.random.randint(key, (8192, 8), 0, 64)
+    g = jax.random.normal(key, (8192,))
+    qd = jax.random.normal(key, (8, 16, 64), jnp.float32)
+    kd = jax.random.normal(key, (8, 2048, 4, 64), jnp.float32)
+
+    cases = {
+        "flash_attention_1k": lambda: fa.flash_attention(
+            q, k, k, force="ref").block_until_ready(),
+        "decode_attention_2k": lambda: da.decode_attention(
+            qd, kd, kd, jnp.array(2000), force="ref").block_until_ready(),
+        "rmsnorm_4kx1k": lambda: rms.rmsnorm(
+            x, scale, force="ref").block_until_ready(),
+        "gbt_hist_8kx8": lambda: gh.build_histograms(
+            bins, g, jnp.abs(g), n_bins=64,
+            force="ref").block_until_ready(),
+    }
+    out = {}
+    for name, fn in cases.items():
+        fn()  # warmup/compile
+        _, us = _timed(fn)
+        out[name] = us
+        _emit(f"perf_kernel_{name}", us, "cpu_reference_path")
+    REPORT["perf_kernels_cpu_ref_us"] = out
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    fig2_exponential_fits()
+    fig3_param_prediction()
+    fig6_rq1_training_sets()
+    fig7_rq2_baselines()
+    fig8_rq3_model_zoo()
+    table1_rq4_uncertainty()
+    perf_vmapped_fit()
+    perf_kernels()
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / "bench_report.json").write_text(json.dumps(REPORT, indent=1))
+    print(f"# total {time.time() - t0:.1f}s; report -> "
+          f"{RESULTS / 'bench_report.json'}")
+
+
+if __name__ == "__main__":
+    main()

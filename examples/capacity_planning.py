@@ -1,0 +1,46 @@
+"""Capacity planning with ALA: pick batch sizes / replica counts from
+predictions instead of benchmarking every configuration.
+
+Run:  PYTHONPATH=src python examples/capacity_planning.py
+"""
+import numpy as np
+
+from repro.bench.datasets import make_inhouse_dataset, train_test_split
+from repro.core.ala import ALA
+from repro.core.annealing import SAConfig
+from repro.inference.scheduler import BatchingQueue, CapacityPlanner, Request
+
+ds = make_inhouse_dataset()
+train, test = train_test_split(ds, test_frac=0.3)
+ala = ALA()
+ala.cfg.sa = SAConfig(n_iters=25, gbt_kw=dict(n_estimators=30,
+                                              learning_rate=0.2))
+ala.fit(*train.workload)
+ala.explore(test.workload)
+ala.fit_error()
+
+planner = CapacityPlanner(ala)
+
+print("=== SLO-driven batch-size planning (ii=2048 -> oo=512) ===")
+for target in (500.0, 2000.0, 8000.0):
+    plan = planner.plan_batch_size(2048, 512, target_thpt=target)
+    print(f"target {target:>7.0f} tok/s -> bb={plan.bb:<4d} "
+          f"predicted={plan.predicted_thpt:>8.0f} conf={plan.confidence:.2f} "
+          f"replicas={plan.replicas}")
+
+print("\n=== latency-bounded planning (per-token SLO) ===")
+for slo in (0.01, 0.05):
+    plan = planner.plan_batch_size(1024, 256, max_token_latency_s=slo)
+    print(f"SLO {slo*1e3:.0f}ms/token -> bb={plan.bb} "
+          f"predicted={plan.predicted_thpt:.0f} tok/s")
+
+print("\n=== request queue dispatch ===")
+q = BatchingQueue(planner, target_thpt=1000.0)
+rng = np.random.default_rng(0)
+for rid in range(200):
+    ii = int(rng.choice([600, 2000]))
+    q.submit(Request(rid=rid, ii=ii, oo=400))
+for (bucket, reqs) in q.ready_batches()[:6]:
+    print(f"bucket {bucket}: dispatched batch of {len(reqs)} "
+          f"(planned bb={q.plans[bucket].bb}, "
+          f"conf={q.plans[bucket].confidence:.2f})")

@@ -1,0 +1,50 @@
+"""Quickstart: the complete ALA pipeline in ~60 lines.
+
+Generates a benchmark dataset with the TPU-v5e serving simulator, fits the
+analytical+ML model, explores training subsets with simulated annealing,
+trains the error predictor, and quantifies uncertainty for a new workload.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.bench.datasets import make_inhouse_dataset, train_test_split
+from repro.core.ala import ALA
+from repro.core.annealing import SAConfig
+
+# 1. benchmark data: ~4,800 (ii, oo, bb, thpt) points for llama3.1-8b
+ds = make_inhouse_dataset()
+train, test = train_test_split(ds, test_frac=0.3)
+print(f"dataset: {len(ds)} rows, "
+      f"{len(np.unique(ds['ii']))} input sizes x "
+      f"{len(np.unique(ds['oo']))} output sizes x "
+      f"{len(np.unique(ds['bb']))} batch sizes")
+
+# 2. Alg 2 + Alg 3: exponential database + parameter predictor
+ala = ALA()
+ala.cfg.sa = SAConfig(n_iters=30, gbt_kw=dict(n_estimators=40,
+                                              learning_rate=0.2,
+                                              max_depth=4))
+ala.fit(*train.workload)
+print(f"fitted {len(ala.db)} (ii,oo) groups "
+      f"(db {ala.timings['fit_db_s']:.2f}s, "
+      f"gbt {ala.timings['fit_predictor_s']:.2f}s)")
+
+# 3. Alg 5: predict throughput — observed and unobserved workloads
+bb = np.array([1, 4, 16, 64, 256], float)
+seen = ala.predict(np.full(5, 1024.0), np.full(5, 512.0), bb)
+unseen = ala.predict(np.full(5, 3000.0), np.full(5, 700.0), bb)
+print("thpt(bb) @ seen  (1024,512):", np.round(seen, 0))
+print("thpt(bb) @ unseen(3000,700):", np.round(unseen, 0))
+print(f"held-out median APE: {ala.score(*test.workload):.2f}%")
+
+# 4. Alg 6 + Alg 7: subset exploration -> error predictor
+ala.explore(test.workload)
+ala.fit_error()
+print(f"SA explored {len(ala.sa_log.subsets)} subsets, "
+      f"best error {ala.sa_log.best_error:.2f}%")
+
+# 5. Alg 8: predicted error + confidence for a new workload
+pred_err, conf = ala.estimate(test.workload)
+print(f"new workload: predicted error {pred_err:.2f}%, "
+      f"confidence {conf:.2f}")

@@ -1,0 +1,48 @@
+"""Training driver with fault tolerance: train a reduced model for a few
+hundred steps on the synthetic pipeline, checkpointing as it goes; re-run
+the same command after killing it and it resumes from the latest atomic
+checkpoint with an identical batch stream.
+
+Run:  PYTHONPATH=src python examples/train_demo.py \
+          [--arch qwen3-0.6b] [--steps 200]
+"""
+import argparse
+
+from repro.configs import ARCHS, get_smoke_config
+from repro.configs.shapes import ShapeSpec
+from repro.models.transformer import Model
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import TrainConfig, Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b", choices=list(ARCHS))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_demo")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch).scaled(d_model=128, d_ff=256)
+    shape = ShapeSpec("demo", seq_len=args.seq, global_batch=args.batch,
+                      kind="train")
+    tcfg = TrainConfig(
+        total_steps=args.steps, ckpt_every=50, log_every=10,
+        ckpt_dir=args.ckpt_dir,
+        opt=AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps))
+    trainer = Trainer(Model(cfg), shape, None, tcfg)
+    trainer.run(seed=0)
+    losses = [h["loss"] for h in trainer.history]
+    if losses:
+        print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} over "
+              f"{len(losses)} steps this run "
+              f"({sum(h['sec'] for h in trainer.history):.1f}s)")
+    # straggler accounting over the run
+    print("median step time:",
+          f"{trainer.monitor.median_duration():.3f}s;",
+          "stragglers flagged:", trainer.monitor.stragglers())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""Benchmark-dataset generation (the paper's §III-A experimental setup).
+
+Three datasets mirror the paper's:
+  * ``inhouse``   — the paper's ~4,800-point grid over (ii, oo, bb) for one
+                    served model (LLaMA-3.1-8B; here on TPU v5e TP=4),
+                    5-10 repetitions per combination.
+  * ``suite``     — LLM-inference-bench-style: many model families x
+                    serving frameworks, bb 1-64, ii/oo 128-2048 (the RQ3
+                    "ANL dataset" analog, here over the 10 assigned archs).
+  * ``mismatch``  — a model run on a *different* accelerator profile
+                    (RQ4's Qwen2-7B-on-Intel-PVC case).
+
+Data comes from the analytical TPU roofline simulator; the real wall-clock
+path (timing the actual JAX engine on CPU at tiny scale) is in
+repro.bench.harness.
+"""
+from __future__ import annotations
+
+import itertools
+import pathlib
+from typing import Dict, Iterable, List, Optional
+
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.core.dataset import Dataset
+from repro.perfmodel.simulator import ServingSetup, sample_throughput
+from repro.perfmodel.tpu import LEGACY_GPU, PROFILES, TPU_V5E
+
+DATA_DIR = pathlib.Path(__file__).resolve().parents[3] / "results" / "data"
+
+INHOUSE_II = (128, 256, 512, 1024, 2048, 4096, 8192, 16384)
+INHOUSE_OO = (128, 256, 512, 1024, 2048, 4096)
+INHOUSE_BB = (1, 2, 4, 8, 16, 32, 64, 128, 256, 512)
+
+SUITE_II = (128, 512, 1024, 2048)
+SUITE_OO = (128, 512, 1024, 2048)
+SUITE_BB = (1, 2, 4, 8, 16, 32, 64)
+FRAMEWORKS = {"vllm-jax": 1.0, "tgi-jax": 0.85, "trt-jax": 1.1}
+
+
+def _tp_degree(cfg) -> int:
+    n = cfg.param_count()
+    if n > 1e11:
+        return 16
+    if n > 1e10:
+        return 8
+    return 4
+
+
+def _simulate(model_name: str, hw, grid, reps: int, rng,
+              framework: str = "vllm-jax", chips: Optional[int] = None,
+              noise_sigma: float = 0.05) -> List[Dict]:
+    cfg = get_config(model_name)
+    setup = ServingSetup(cfg=cfg, hw=hw, chips=chips or _tp_degree(cfg),
+                         framework_eff=FRAMEWORKS[framework])
+    rows = []
+    for ii, oo, bb in grid:
+        for t in sample_throughput(setup, ii, oo, bb, reps, rng,
+                                   noise_sigma=noise_sigma):
+            rows.append(dict(model=model_name, acc=hw.name,
+                             acc_count=setup.chips, back=framework,
+                             prec="bf16", mode="serve",
+                             ii=ii, oo=oo, bb=bb, thpt=float(t)))
+    return rows
+
+
+def make_inhouse_dataset(seed: int = 0, reps: int = 10) -> Dataset:
+    rng = np.random.default_rng(seed)
+    grid = list(itertools.product(INHOUSE_II, INHOUSE_OO, INHOUSE_BB))
+    rows = _simulate("llama3.1-8b", TPU_V5E, grid, reps, rng)
+    return Dataset.from_rows(rows)
+
+
+def make_suite_dataset(seed: int = 1, reps: int = 3,
+                       models: Optional[Iterable[str]] = None,
+                       frameworks: Optional[Iterable[str]] = None) -> Dataset:
+    rng = np.random.default_rng(seed)
+    models = list(models or ARCHS)
+    frameworks = list(frameworks or FRAMEWORKS)
+    grid = list(itertools.product(SUITE_II, SUITE_OO, SUITE_BB))
+    rows: List[Dict] = []
+    for m in models:
+        for fw in frameworks:
+            rows.extend(_simulate(m, TPU_V5E, grid, reps, rng, framework=fw))
+    return Dataset.from_rows(rows)
+
+
+def make_mismatch_dataset(seed: int = 2, reps: int = 3,
+                          model: str = "qwen3-0.6b") -> Dataset:
+    """RQ4: same workload grid, different accelerator profile."""
+    rng = np.random.default_rng(seed)
+    grid = list(itertools.product(SUITE_II, SUITE_OO, SUITE_BB))
+    rows = _simulate(model, LEGACY_GPU, grid, reps, rng, chips=4,
+                     noise_sigma=0.08)
+    return Dataset.from_rows(rows)
+
+
+def load_or_make(name: str, **kw) -> Dataset:
+    path = DATA_DIR / name
+    if path.with_suffix(".npz").exists():
+        return Dataset.load(path)
+    ds = {"inhouse": make_inhouse_dataset,
+          "suite": make_suite_dataset,
+          "mismatch": make_mismatch_dataset}[name](**kw)
+    ds.save(path)
+    return ds
+
+
+def train_test_split(ds: Dataset, test_frac: float = 0.3, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    mask = rng.random(len(ds)) < test_frac
+    return ds[~mask], ds[mask]

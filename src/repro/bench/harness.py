@@ -1,0 +1,44 @@
+"""Real wall-clock benchmarking of the JAX serving engine.
+
+The paper's "custom inference benchmarking framework": sweep (ii, oo, bb),
+run each combination ``reps`` times, record tokens/sec.  On this CPU
+container it runs tiny smoke-size models (the numbers are real measured
+throughput of the actual engine); on TPU the same harness benchmarks the
+full configs.  Output rows feed the same ALA pipeline as simulator data —
+the framework is agnostic to where thpt came from.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, Iterable, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.dataset import Dataset
+from repro.inference.engine import ServingEngine
+from repro.models.transformer import Model
+
+CPU_GRID_II = (16, 32, 64)
+CPU_GRID_OO = (8, 16)
+CPU_GRID_BB = (1, 2, 4, 8, 16)
+
+
+def measure_arch(arch: str, grid_ii: Sequence[int] = CPU_GRID_II,
+                 grid_oo: Sequence[int] = CPU_GRID_OO,
+                 grid_bb: Sequence[int] = CPU_GRID_BB,
+                 reps: int = 2, seed: int = 0) -> Dataset:
+    cfg = get_smoke_config(arch)
+    model = Model(cfg)
+    params = model.init(jax.random.key(seed))
+    engine = ServingEngine(model, params)
+    rows: List[Dict] = []
+    for ii, oo, bb in itertools.product(grid_ii, grid_oo, grid_bb):
+        for r in engine.measure_throughput(ii, oo, bb, reps=reps,
+                                           seed=seed):
+            rows.append(dict(model=arch, acc="cpu-host", acc_count=1,
+                             back="repro-jax", prec="fp32", mode="serve",
+                             ii=r["ii"], oo=r["oo"], bb=r["bb"],
+                             thpt=r["thpt"]))
+    return Dataset.from_rows(rows)

@@ -1,0 +1,47 @@
+"""Architecture registry: ``get_config(arch_id)`` + smoke-size reductions."""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+
+ARCHS = (
+    "llama3.2-3b",
+    "qwen2.5-32b",
+    "command-r-35b",
+    "qwen3-0.6b",
+    "llama4-maverick-400b-a17b",
+    "phi3.5-moe-42b-a6.6b",
+    "jamba-1.5-large-398b",
+    "xlstm-125m",
+    "whisper-medium",
+    "internvl2-1b",
+    # the paper's own measured subject (in-house dataset)
+    "llama3.1-8b",
+)
+
+_MODULES = {
+    "llama3.2-3b": "llama3_2_3b",
+    "qwen2.5-32b": "qwen2_5_32b",
+    "command-r-35b": "command_r_35b",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "phi3.5-moe-42b-a6.6b": "phi3_5_moe_42b_a6_6b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "xlstm-125m": "xlstm_125m",
+    "whisper-medium": "whisper_medium",
+    "internvl2-1b": "internvl2_1b",
+    "llama3.1-8b": "llama3_1_8b",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+    return mod.smoke()

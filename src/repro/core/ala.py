@@ -1,0 +1,109 @@
+"""ALA orchestrator: the paper's full pipeline as one object.
+
+    fit          -> Alg 2 (exp database) + Alg 3 (param predictor)
+    predict      -> Alg 5
+    explore      -> Alg 6 (simulated annealing over training subsets)
+    fit_error    -> Alg 7 (error predictor on SA logs)
+    estimate     -> Alg 8 (predicted error + histogram-cosine confidence)
+
+``Registry``-level (Alg 4) training over hardware/software combinations
+lives in repro.core.registry; this class operates within one combination.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core import annealing
+from repro.core.annealing import SAConfig, SALog, Subset, median_ape
+from repro.core.database import ExpDatabase, build_exponential_database
+from repro.core.error_predictor import (encode_subset, predict_error,
+                                        train_error_predictor)
+from repro.core.gbt import GBTRegressor, MultiOutputGBT
+from repro.core.predictor import predict_throughput, train_param_predictor
+from repro.core.uncertainty import confidence as _confidence
+
+
+@dataclasses.dataclass
+class ALAConfig:
+    gbt_kw: dict = dataclasses.field(default_factory=lambda: dict(
+        n_estimators=150, learning_rate=0.08, max_depth=4))
+    sa: SAConfig = dataclasses.field(default_factory=SAConfig)
+
+
+class ALA:
+    def __init__(self, cfg: Optional[ALAConfig] = None):
+        self.cfg = cfg or ALAConfig()
+        self.db: Optional[ExpDatabase] = None
+        self.predictor: Optional[MultiOutputGBT] = None
+        self.sa_log: Optional[SALog] = None
+        self.error_model: Optional[GBTRegressor] = None
+        self._train = None
+        self.timings: Dict[str, float] = {}
+
+    # -- Alg 2 + Alg 3 -------------------------------------------------------
+    def fit(self, ii, oo, bb, thpt) -> "ALA":
+        t0 = time.perf_counter()
+        self._train = (np.asarray(ii, np.float64), np.asarray(oo, np.float64),
+                       np.asarray(bb, np.float64), np.asarray(thpt, np.float64))
+        self.db = build_exponential_database(*self._train)
+        t1 = time.perf_counter()
+        self.predictor = (train_param_predictor(self.db.training,
+                                                **self.cfg.gbt_kw)
+                          if self.db is not None and len(self.db.training) >= 4
+                          else None)
+        t2 = time.perf_counter()
+        self.timings.update(fit_db_s=t1 - t0, fit_predictor_s=t2 - t1)
+        return self
+
+    # -- Alg 5 ----------------------------------------------------------------
+    def predict(self, ii, oo, bb) -> np.ndarray:
+        return predict_throughput(self.db, self.predictor, ii, oo, bb)
+
+    def score(self, ii, oo, bb, thpt) -> float:
+        return median_ape(np.asarray(thpt, np.float64),
+                          self.predict(ii, oo, bb))
+
+    # -- Alg 6 ----------------------------------------------------------------
+    def explore(self, test, initial: Optional[Subset] = None,
+                on_iter=None) -> SALog:
+        assert self._train is not None, "fit() first"
+        t0 = time.perf_counter()
+        self.sa_log = annealing.anneal(self._train, test, self.cfg.sa,
+                                       initial=initial, on_iter=on_iter)
+        self.timings["explore_s"] = time.perf_counter() - t0
+        return self.sa_log
+
+    # -- Alg 7 ----------------------------------------------------------------
+    def fit_error(self, **gbt_kw) -> GBTRegressor:
+        assert self.sa_log is not None, "explore() first"
+        t0 = time.perf_counter()
+        self.error_model = train_error_predictor(self.sa_log, **gbt_kw)
+        self.timings["fit_error_s"] = time.perf_counter() - t0
+        return self.error_model
+
+    # -- Alg 8 ----------------------------------------------------------------
+    def estimate(self, new) -> Tuple[float, float]:
+        """(predicted error %, confidence) for a new workload dataset.
+
+        ``new`` is an (ii, oo, bb, thpt) tuple (thpt may be NaNs when
+        unknown — it only enters the confidence histogram when finite)."""
+        assert self.error_model is not None and self.sa_log is not None
+        nii, noo, nbb, nthpt = (np.asarray(v, np.float64) for v in new)
+        sig: Subset = {"ii": frozenset(np.unique(nii).tolist()),
+                       "oo": frozenset(np.unique(noo).tolist()),
+                       "bb": frozenset(np.unique(nbb).tolist())}
+        err = float(predict_error(self.error_model, [sig],
+                                  self.sa_log.universes)[0])
+        finite = np.isfinite(nthpt)
+        if not finite.all():
+            # fill unknown thpt with ALA's own predictions for the histogram
+            pred = self.predict(nii[~finite], noo[~finite], nbb[~finite])
+            nthpt = nthpt.copy()
+            nthpt[~finite] = pred
+        _, conf = _confidence(self._train, self.sa_log,
+                              (nii, noo, nbb, nthpt))
+        return err, conf

@@ -1,0 +1,132 @@
+"""Simulated annealing over training-subset space (paper Alg 6).
+
+State = which unique values of (ii, oo, bb) are included in the training
+subset.  EvaluateSubset trains the full ALA pipeline (Alg 2 + Alg 3) on
+the filtered rows and scores median percentage error on a held-out
+evaluation set.  Every iteration logs (subset, error) — the raw material
+for the error predictor (Alg 7) and the uncertainty metric (Alg 8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.database import build_exponential_database
+from repro.core.predictor import predict_throughput, train_param_predictor
+
+Subset = Dict[str, frozenset]
+
+
+@dataclasses.dataclass
+class SAConfig:
+    n_iters: int = 150
+    temperature: float = 10.0
+    cooling: float = 0.97
+    min_keep: int = 2           # never drop a dim below this many values
+    seed: int = 0
+    # GBT size during SA evaluations (smaller = faster exploration)
+    gbt_kw: dict = dataclasses.field(default_factory=lambda: dict(
+        n_estimators=60, learning_rate=0.15, max_depth=4))
+
+
+@dataclasses.dataclass
+class SALog:
+    subsets: List[Subset]
+    errors: List[float]
+    universes: Dict[str, np.ndarray]
+    best_subset: Subset
+    best_error: float
+
+
+def median_ape(y_true: np.ndarray, y_pred: np.ndarray) -> float:
+    """Median absolute percentage error (the paper's headline metric)."""
+    denom = np.maximum(np.abs(y_true), 1e-9)
+    return float(np.median(np.abs(y_pred - y_true) / denom) * 100.0)
+
+
+def subset_mask(ii, oo, bb, subset: Subset) -> np.ndarray:
+    m = np.isin(ii, list(subset["ii"]))
+    m &= np.isin(oo, list(subset["oo"]))
+    m &= np.isin(bb, list(subset["bb"]))
+    return m
+
+
+def evaluate_subset(train, test, subset: Subset,
+                    gbt_kw: Optional[dict] = None) -> float:
+    """Train ALA on the subset rows; median APE on the eval rows."""
+    ii, oo, bb, thpt = train
+    tii, too, tbb, tthpt = test
+    m = subset_mask(ii, oo, bb, subset)
+    if m.sum() < 4:
+        return 100.0
+    db = build_exponential_database(ii[m], oo[m], bb[m], thpt[m])
+    if db is None:
+        return 100.0
+    pred = None
+    if len(db.training) >= 4:
+        pred = train_param_predictor(db.training, **(gbt_kw or {}))
+    yhat = predict_throughput(db, pred, tii, too, tbb)
+    return median_ape(tthpt, yhat)
+
+
+def _modify(subset: Subset, universes, rng, min_keep: int) -> Subset:
+    """Randomly add or delete one value from one of the (ii,oo,bb) dims."""
+    new = {k: set(v) for k, v in subset.items()}
+    for _ in range(10):  # retry until a legal move is found
+        dim = rng.choice(("ii", "oo", "bb"))
+        cur = new[dim]
+        universe = set(universes[dim].tolist())
+        missing = sorted(universe - cur)
+        can_add = bool(missing)
+        can_del = len(cur) > min_keep
+        if not (can_add or can_del):
+            continue
+        if can_add and (not can_del or rng.random() < 0.5):
+            cur.add(missing[rng.integers(len(missing))])
+        else:
+            cur.remove(sorted(cur)[rng.integers(len(cur))])
+        break
+    return {k: frozenset(v) for k, v in new.items()}
+
+
+def anneal(train, test, cfg: SAConfig,
+           initial: Optional[Subset] = None,
+           on_iter: Optional[Callable[[int, float], None]] = None) -> SALog:
+    """Alg 6. ``train``/``test`` are (ii, oo, bb, thpt) tuples."""
+    ii, oo, bb, _ = train
+    rng = np.random.default_rng(cfg.seed)
+    universes = {"ii": np.unique(ii), "oo": np.unique(oo),
+                 "bb": np.unique(bb)}
+    if initial is None:
+        # start from a random half of each universe
+        initial = {}
+        for k, u in universes.items():
+            k_n = max(cfg.min_keep, len(u) // 2)
+            initial[k] = frozenset(
+                rng.choice(u, size=k_n, replace=False).tolist())
+    best = dict(initial)
+    e_best = evaluate_subset(train, test, best, cfg.gbt_kw)
+    tau = cfg.temperature
+    subsets, errors = [dict(best)], [e_best]
+    # anchor: log the full-coverage subset so the error predictor is
+    # calibrated for near-complete signatures (Alg 8 queries often are)
+    full = {k: frozenset(u.tolist()) for k, u in universes.items()}
+    subsets.append(full)
+    errors.append(evaluate_subset(train, test, full, cfg.gbt_kw))
+    for it in range(cfg.n_iters):
+        tau *= cfg.cooling
+        cand = _modify(best, universes, rng, cfg.min_keep)
+        e_cand = evaluate_subset(train, test, cand, cfg.gbt_kw)
+        accept = (e_cand < e_best or
+                  rng.random() < np.exp((e_best - e_cand)
+                                        / max(tau, 1e-9)))
+        if accept:
+            best, e_best = cand, e_cand
+        subsets.append(dict(cand))
+        errors.append(e_cand)
+        if on_iter is not None:
+            on_iter(it, e_cand)
+    return SALog(subsets=subsets, errors=errors, universes=universes,
+                 best_subset=best, best_error=e_best)

@@ -1,0 +1,71 @@
+"""Exponential parameter database (paper Alg 2).
+
+For every unique (ii, oo) pair in a benchmark sub-dataset, fit the
+exponential model parameters and store them in P (lookup) and T (training
+rows for the parameter predictor).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.expmodel import exp_model, initial_params
+from repro.core.fit import fit_exponential_groups
+
+
+@dataclasses.dataclass
+class ExpDatabase:
+    params: Dict[Tuple[float, float], np.ndarray]  # (ii,oo) -> (a,b,c)
+    training: np.ndarray                            # (n, 5): ii,oo,a,b,c
+
+    def lookup(self, ii: float, oo: float) -> Optional[np.ndarray]:
+        return self.params.get((float(ii), float(oo)))
+
+    def __len__(self):
+        return len(self.params)
+
+
+def build_exponential_database(ii, oo, bb, thpt,
+                               min_points: int = 1) -> Optional[ExpDatabase]:
+    """Alg 2: group by unique (ii, oo), percentile-init, batched LM fit."""
+    ii = np.asarray(ii, np.float64)
+    oo = np.asarray(oo, np.float64)
+    bb = np.asarray(bb, np.float64)
+    thpt = np.asarray(thpt, np.float64)
+
+    keys = np.stack([ii, oo], axis=1)
+    uniq, inv = np.unique(keys, axis=0, return_inverse=True)
+    groups = []
+    kept = []
+    for g in range(len(uniq)):
+        rows = inv == g
+        if rows.sum() < min_points:
+            continue
+        gb, gt = bb[rows], thpt[rows]
+        theta0 = initial_params(gb, gt)
+        groups.append((gb, gt, theta0))
+        kept.append(g)
+    if not groups:
+        return None
+    theta = fit_exponential_groups(groups)
+    # "optimization successful" filter: finite params + sane fit
+    params: Dict[Tuple[float, float], np.ndarray] = {}
+    training = []
+    for (g, th) in zip(kept, theta):
+        if not np.all(np.isfinite(th)):
+            continue
+        key = (float(uniq[g, 0]), float(uniq[g, 1]))
+        params[key] = th
+        training.append([key[0], key[1], th[0], th[1], th[2]])
+    if not training:
+        return None
+    return ExpDatabase(params=params, training=np.asarray(training))
+
+
+def db_predict(db: ExpDatabase, ii: float, oo: float, bb) -> Optional[np.ndarray]:
+    th = db.lookup(ii, oo)
+    if th is None:
+        return None
+    return exp_model(np.asarray(bb, np.float64), *th)

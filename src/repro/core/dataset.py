@@ -1,0 +1,82 @@
+"""Columnar benchmark dataset (DataFrame-lite; pandas unavailable offline).
+
+Columns are numpy arrays of equal length.  Canonical workload columns are
+``ii, oo, bb, thpt`` plus arbitrary configuration columns (model, acc,
+acc_count, back, prec, mode, ...) used by the Alg 4 registry.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+import numpy as np
+
+
+class Dataset:
+    def __init__(self, columns: Dict[str, np.ndarray]):
+        n = {len(v) for v in columns.values()}
+        assert len(n) <= 1, f"ragged columns: { {k: len(v) for k, v in columns.items()} }"
+        self.cols = {k: np.asarray(v) for k, v in columns.items()}
+
+    def __len__(self):
+        return 0 if not self.cols else len(next(iter(self.cols.values())))
+
+    def __getitem__(self, key):
+        if isinstance(key, str):
+            return self.cols[key]
+        return Dataset({k: v[key] for k, v in self.cols.items()})
+
+    def filter(self, **conds) -> "Dataset":
+        mask = np.ones(len(self), bool)
+        for k, v in conds.items():
+            mask &= (self.cols[k] == v)
+        return self[mask]
+
+    def mask(self, mask: np.ndarray) -> "Dataset":
+        return self[mask]
+
+    def concat(self, other: "Dataset") -> "Dataset":
+        return Dataset({k: np.concatenate([self.cols[k], other.cols[k]])
+                        for k in self.cols})
+
+    def unique_combos(self, keys: Sequence[str]) -> List[Tuple]:
+        arr = np.stack([self.cols[k].astype(str) for k in keys], axis=1)
+        return [tuple(r) for r in np.unique(arr, axis=0)]
+
+    @property
+    def workload(self):
+        return (self.cols["ii"].astype(np.float64),
+                self.cols["oo"].astype(np.float64),
+                self.cols["bb"].astype(np.float64),
+                self.cols["thpt"].astype(np.float64))
+
+    # -- persistence ---------------------------------------------------------
+    def save(self, path) -> None:
+        path = pathlib.Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        meta = {k: str(v.dtype) for k, v in self.cols.items()}
+        np.savez_compressed(path.with_suffix(".npz"),
+                            **{k: v for k, v in self.cols.items()})
+        path.with_suffix(".meta.json").write_text(json.dumps(meta))
+
+    @classmethod
+    def load(cls, path) -> "Dataset":
+        path = pathlib.Path(path)
+        data = np.load(path.with_suffix(".npz"), allow_pickle=False)
+        return cls({k: data[k] for k in data.files})
+
+    def to_csv(self, path) -> None:
+        path = pathlib.Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        keys = list(self.cols)
+        with open(path, "w") as f:
+            f.write(",".join(keys) + "\n")
+            for i in range(len(self)):
+                f.write(",".join(str(self.cols[k][i]) for k in keys) + "\n")
+
+    @classmethod
+    def from_rows(cls, rows: Iterable[Dict]) -> "Dataset":
+        rows = list(rows)
+        keys = rows[0].keys()
+        return cls({k: np.asarray([r[k] for r in rows]) for k in keys})

@@ -1,0 +1,39 @@
+"""Error predictor over SA logs (paper Alg 7).
+
+Each logged subset is encoded as a binary membership vector over the
+universal value sets (unique_ii | unique_bb | unique_oo, in the paper's
+order); an XGBoost-style GBT regresses the observed median-APE.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.annealing import SALog, Subset
+from repro.core.gbt import GBTRegressor
+
+
+def encode_subset(subset: Subset, universes: Dict[str, np.ndarray]) -> np.ndarray:
+    parts = []
+    for dim in ("ii", "bb", "oo"):          # paper's Alg 7 ordering
+        u = universes[dim]
+        s = subset[dim]
+        parts.append(np.isin(u, list(s)).astype(np.float64))
+    return np.concatenate(parts)
+
+
+def train_error_predictor(log: SALog, **gbt_kw) -> GBTRegressor:
+    X = np.stack([encode_subset(s, log.universes) for s in log.subsets])
+    y = np.asarray(log.errors, np.float64)
+    kw = dict(n_estimators=200, learning_rate=0.05, max_depth=4, n_bins=4)
+    kw.update(gbt_kw)
+    model = GBTRegressor(**kw)
+    model.fit(X, y)
+    return model
+
+
+def predict_error(model: GBTRegressor, subsets: List[Subset],
+                  universes: Dict[str, np.ndarray]) -> np.ndarray:
+    X = np.stack([encode_subset(s, universes) for s in subsets])
+    return model.predict(X)

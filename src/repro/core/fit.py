@@ -1,0 +1,139 @@
+"""Batched nonlinear least squares for the exponential model — pure JAX.
+
+scipy is unavailable offline, so Alg 2's ``Optimize`` step is a
+Levenberg–Marquardt solver written against jnp and *vmapped over
+workload groups*: the hundreds of per-(ii,oo) fits execute as one XLA
+call instead of a Python loop of scipy ``curve_fit``s — a beyond-paper
+speedup measured in benchmarks/run.py.
+
+Bounds (a, b >= 0; c >= 0) are enforced by projection after each LM step,
+matching the paper's "bounded constraints" note.  Masked padding rows
+make ragged groups rectangular.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_LM_ITERS = 60
+_MU0 = 1e-2
+
+
+def _residuals(theta, x, y, w):
+    a, b, c = theta[0], theta[1], theta[2]
+    pred = c - a * jnp.exp(-b * x)
+    return (pred - y) * w
+
+
+def _lm_step(theta, mu, x, y, w):
+    r = _residuals(theta, x, y, w)
+    # analytic Jacobian of residuals wrt (a, b, c)
+    a, b = theta[0], theta[1]
+    e = jnp.exp(-b * x)
+    J = jnp.stack([-e * w, a * x * e * w, jnp.ones_like(x) * w], axis=1)
+    JtJ = J.T @ J
+    Jtr = J.T @ r
+    loss = jnp.sum(r * r)
+
+    def solve(m):
+        A = JtJ + m * jnp.eye(3, dtype=JtJ.dtype)
+        return jnp.linalg.solve(A, -Jtr)
+
+    delta = solve(mu)
+    new_theta = theta + delta
+    # projected bounds: a,b,c >= tiny (b also capped to avoid overflow)
+    new_theta = jnp.stack([
+        jnp.maximum(new_theta[0], 1e-8),
+        jnp.clip(new_theta[1], 1e-8, 50.0),
+        jnp.maximum(new_theta[2], 0.0)])
+    new_loss = jnp.sum(_residuals(new_theta, x, y, w) ** 2)
+    improved = new_loss < loss
+    theta = jnp.where(improved, new_theta, theta)
+    mu = jnp.where(improved, mu * 0.5, mu * 2.5)
+    mu = jnp.clip(mu, 1e-10, 1e8)
+    return theta, mu
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _fit_one(theta0, x, y, w):
+    def body(carry, _):
+        theta, mu = carry
+        theta, mu = _lm_step(theta, mu, x, y, w)
+        return (theta, mu), None
+
+    (theta, _), _ = jax.lax.scan(
+        body, (theta0, jnp.asarray(_MU0, theta0.dtype)), None,
+        length=_LM_ITERS)
+    return theta
+
+
+_fit_batch = jax.jit(jax.vmap(_fit_one))
+
+
+def fit_exponential_groups(groups):
+    """Fit (a,b,c) for a list of (bb, thpt, theta0) ragged groups.
+
+    Returns (G, 3) float64 array.  Groups are padded to the max length and
+    solved in one vmapped LM call.
+    """
+    if not groups:
+        return np.zeros((0, 3))
+    maxn = max(len(g[0]) for g in groups)
+    G = len(groups)
+    X = np.zeros((G, maxn), np.float32)
+    Y = np.zeros((G, maxn), np.float32)
+    W = np.zeros((G, maxn), np.float32)
+    T0 = np.zeros((G, 3), np.float32)
+    scale = np.zeros(G, np.float64)
+    for i, (bb, thpt, theta0) in enumerate(groups):
+        n = len(bb)
+        # normalize thpt per group for conditioning; rescale after
+        s = max(float(np.max(np.abs(thpt))), 1e-9)
+        X[i, :n] = bb
+        Y[i, :n] = np.asarray(thpt, np.float64) / s
+        W[i, :n] = 1.0
+        T0[i] = theta0 * np.array([1 / s, 1.0, 1 / s])
+        scale[i] = s
+    theta = np.asarray(_fit_batch(jnp.asarray(T0), jnp.asarray(X),
+                                  jnp.asarray(Y), jnp.asarray(W)),
+                       np.float64)
+    theta[:, 0] *= scale
+    theta[:, 2] *= scale
+    return theta
+
+
+def fit_exponential_numpy(bb, thpt, theta0, iters: int = 200):
+    """Reference scalar LM in numpy (oracle for property tests)."""
+    theta = np.asarray(theta0, np.float64).copy()
+    mu = _MU0
+    x = np.asarray(bb, np.float64)
+    y = np.asarray(thpt, np.float64)
+    s = max(float(np.max(np.abs(y))), 1e-9)
+    y = y / s
+    theta[0] /= s
+    theta[2] /= s
+
+    def resid(t):
+        return (t[2] - t[0] * np.exp(-t[1] * x)) - y
+
+    for _ in range(iters):
+        r = resid(theta)
+        e = np.exp(-theta[1] * x)
+        J = np.stack([-e, theta[0] * x * e, np.ones_like(x)], axis=1)
+        A = J.T @ J + mu * np.eye(3)
+        delta = np.linalg.solve(A, -(J.T @ r))
+        cand = theta + delta
+        cand[0] = max(cand[0], 1e-8)
+        cand[1] = min(max(cand[1], 1e-8), 50.0)
+        cand[2] = max(cand[2], 0.0)
+        if np.sum(resid(cand) ** 2) < np.sum(r ** 2):
+            theta, mu = cand, mu * 0.5
+        else:
+            mu *= 2.5
+        mu = float(np.clip(mu, 1e-10, 1e8))
+    theta[0] *= s
+    theta[2] *= s
+    return theta

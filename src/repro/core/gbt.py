@@ -1,0 +1,281 @@
+"""Histogram gradient-boosted trees, from scratch (XGBoost stand-in).
+
+Second-order boosting in the XGBoost sense [Chen & Guestrin, KDD'16]:
+quantile-binned features, per-node gradient/hessian histograms, gain
+  0.5 * (GL^2/(HL+l) + GR^2/(HR+l) - G^2/(H+l))
+shrinkage, row subsampling, and hessian-weighted leaves.  Level-wise
+growth, fully vectorized over nodes with ``np.add.at`` histograms; the
+Pallas ``gbt_hist`` kernel provides the TPU path for the same histogram
+build (``use_kernel=True`` routes through it in interpret/jnp form).
+
+This is the learning component of ALA (paper Alg 3/7) and of the RF/GB
+baselines (Fig 7).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class _Tree:
+    feature: np.ndarray      # (n_nodes,) int32, -1 for leaf
+    threshold: np.ndarray    # (n_nodes,) int32 bin id: go left if bin <= thr
+    left: np.ndarray         # (n_nodes,) int32
+    right: np.ndarray        # (n_nodes,) int32
+    value: np.ndarray        # (n_nodes,) float32 leaf values
+
+    def predict_bins(self, bins: np.ndarray) -> np.ndarray:
+        node = np.zeros(bins.shape[0], dtype=np.int32)
+        active = self.feature[node] >= 0
+        while active.any():
+            f = self.feature[node[active]]
+            thr = self.threshold[node[active]]
+            go_left = bins[active, f] <= thr
+            nxt = np.where(go_left, self.left[node[active]],
+                           self.right[node[active]])
+            node[active] = nxt
+            active = self.feature[node] >= 0
+        return self.value[node]
+
+
+class GBTRegressor:
+    """Squared-error histogram GBT (see module docstring)."""
+
+    def __init__(self, n_estimators: int = 200, learning_rate: float = 0.1,
+                 max_depth: int = 4, n_bins: int = 64,
+                 min_child_weight: float = 1.0, reg_lambda: float = 1.0,
+                 subsample: float = 1.0, colsample: float = 1.0,
+                 seed: int = 0, use_kernel: bool = False):
+        self.n_estimators = n_estimators
+        self.learning_rate = learning_rate
+        self.max_depth = max_depth
+        self.n_bins = n_bins
+        self.min_child_weight = min_child_weight
+        self.reg_lambda = reg_lambda
+        self.subsample = subsample
+        self.colsample = colsample
+        self.seed = seed
+        self.use_kernel = use_kernel
+        self.trees_: List[_Tree] = []
+        self.base_: float = 0.0
+        self.bin_edges_: Optional[np.ndarray] = None
+
+    # -- binning -------------------------------------------------------------
+    def _fit_bins(self, X: np.ndarray) -> np.ndarray:
+        n, f = X.shape
+        qs = np.linspace(0, 1, self.n_bins + 1)[1:-1]
+        edges = np.quantile(X, qs, axis=0).T        # (f, n_bins-1)
+        # dedupe per-feature edges to keep monotonicity
+        self.bin_edges_ = edges
+        return self._transform_bins(X)
+
+    def _transform_bins(self, X: np.ndarray) -> np.ndarray:
+        bins = np.empty(X.shape, dtype=np.int32)
+        for j in range(X.shape[1]):
+            bins[:, j] = np.searchsorted(self.bin_edges_[j], X[:, j],
+                                         side="right")
+        return bins
+
+    # -- histogram -----------------------------------------------------------
+    def _histograms(self, bins, grad, hess, node_id, n_nodes):
+        """(n_nodes, f, n_bins, 2) gradient/hessian histograms."""
+        n, f = bins.shape
+        if self.use_kernel and n_nodes == 1:
+            from repro.kernels.gbt_hist import ops as gh_ops
+            h = np.asarray(gh_ops.build_histograms(
+                bins, grad.astype(np.float32), hess.astype(np.float32),
+                n_bins=self.n_bins, force="interpret"))
+            return h[None]
+        hist = np.zeros((n_nodes, f, self.n_bins, 2), np.float64)
+        fidx = np.broadcast_to(np.arange(f)[None, :], bins.shape)
+        nidx = np.broadcast_to(node_id[:, None], bins.shape)
+        np.add.at(hist, (nidx, fidx, bins, 0),
+                  np.broadcast_to(grad[:, None], bins.shape))
+        np.add.at(hist, (nidx, fidx, bins, 1),
+                  np.broadcast_to(hess[:, None], bins.shape))
+        return hist
+
+    # -- single tree ----------------------------------------------------------
+    def _grow_tree(self, bins, grad, hess, rng) -> _Tree:
+        n, f = bins.shape
+        feat_mask = np.ones(f, bool)
+        if self.colsample < 1.0:
+            k = max(1, int(round(self.colsample * f)))
+            feat_mask[:] = False
+            feat_mask[rng.choice(f, size=k, replace=False)] = True
+
+        max_nodes = 2 ** (self.max_depth + 1) - 1
+        feature = np.full(max_nodes, -1, np.int32)
+        threshold = np.zeros(max_nodes, np.int32)
+        left = np.zeros(max_nodes, np.int32)
+        right = np.zeros(max_nodes, np.int32)
+        value = np.zeros(max_nodes, np.float32)
+        node_of_row = np.zeros(n, np.int32)   # index into current level list
+        # current level: list of node ids; rows hold level-local index
+        level_nodes = [0]
+        next_free = 1
+        lam = self.reg_lambda
+
+        for depth in range(self.max_depth + 1):
+            n_level = len(level_nodes)
+            if n_level == 0:
+                break
+            hist = self._histograms(bins, grad, hess, node_of_row, n_level)
+            G = hist[..., 0].sum(axis=2)      # (n_level, f) totals per feat
+            H = hist[..., 1].sum(axis=2)
+            Gtot, Htot = G[:, 0], H[:, 0]
+            leaf_val = -Gtot / (Htot + lam)
+
+            if depth == self.max_depth:
+                for li, nid in enumerate(level_nodes):
+                    value[nid] = leaf_val[li]
+                break
+
+            GL = np.cumsum(hist[..., 0], axis=2)   # (n_level, f, n_bins)
+            HL = np.cumsum(hist[..., 1], axis=2)
+            GR = Gtot[:, None, None] - GL
+            HR = Htot[:, None, None] - HL
+            gain = 0.5 * (GL ** 2 / (HL + lam) + GR ** 2 / (HR + lam)
+                          - (Gtot ** 2 / (Htot + lam))[:, None, None])
+            ok = (HL >= self.min_child_weight) & (HR >= self.min_child_weight)
+            ok &= feat_mask[None, :, None]
+            ok[..., -1] = False                     # right side must be non-empty
+            gain = np.where(ok, gain, -np.inf)
+            flat = gain.reshape(n_level, -1)
+            best = flat.argmax(axis=1)
+            best_gain = flat[np.arange(n_level), best]
+            best_f = (best // self.n_bins).astype(np.int32)
+            best_b = (best % self.n_bins).astype(np.int32)
+
+            new_level = []
+            remap = np.full(n_level, -1, np.int32)  # level idx -> keeps rows
+            child_base = {}
+            for li, nid in enumerate(level_nodes):
+                if not np.isfinite(best_gain[li]) or best_gain[li] <= 1e-12:
+                    value[nid] = leaf_val[li]
+                    continue
+                feature[nid] = best_f[li]
+                threshold[nid] = best_b[li]
+                left[nid] = next_free
+                right[nid] = next_free + 1
+                child_base[li] = len(new_level)
+                new_level.extend([next_free, next_free + 1])
+                next_free += 2
+
+            if not new_level:
+                break
+            # reassign rows to level-local indices of the next level
+            new_node_of_row = np.full(len(node_of_row), -1, np.int32)
+            for li in child_base:
+                rows = node_of_row == li
+                go_left = bins[rows, best_f[li]] <= best_b[li]
+                new_node_of_row[rows] = child_base[li] + (~go_left)
+            keep = new_node_of_row >= 0
+            bins, grad, hess = bins[keep], grad[keep], hess[keep]
+            node_of_row = new_node_of_row[keep]
+            level_nodes = new_level
+
+        return _Tree(feature=feature[:next_free],
+                     threshold=threshold[:next_free],
+                     left=left[:next_free], right=right[:next_free],
+                     value=value[:next_free])
+
+    # -- public API -------------------------------------------------------------
+    def fit(self, X: np.ndarray, y: np.ndarray) -> "GBTRegressor":
+        X = np.asarray(X, np.float64)
+        y = np.asarray(y, np.float64)
+        assert X.ndim == 2 and y.shape == (X.shape[0],)
+        rng = np.random.default_rng(self.seed)
+        bins = self._fit_bins(X)
+        self.base_ = float(y.mean()) if len(y) else 0.0
+        pred = np.full_like(y, self.base_)
+        self.trees_ = []
+        for t in range(self.n_estimators):
+            grad = pred - y
+            hess = np.ones_like(y)
+            if self.subsample < 1.0:
+                take = rng.random(len(y)) < self.subsample
+                if take.sum() < 2:
+                    take[:] = True
+            else:
+                take = slice(None)
+            tree = self._grow_tree(bins[take], grad[take], hess[take], rng)
+            self.trees_.append(tree)
+            pred += self.learning_rate * tree.predict_bins(bins)
+        return self
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        X = np.asarray(X, np.float64)
+        bins = self._transform_bins(X)
+        out = np.full(X.shape[0], self.base_, np.float64)
+        for tree in self.trees_:
+            out += self.learning_rate * tree.predict_bins(bins)
+        return out
+
+
+class MultiOutputGBT:
+    """One GBTRegressor per target column (paper: MultiOutputRegressor)."""
+
+    def __init__(self, n_outputs: int, **kw):
+        seed = kw.pop("seed", 0)
+        self.models = [GBTRegressor(seed=seed + i, **kw)
+                       for i in range(n_outputs)]
+
+    def fit(self, X, Y):
+        Y = np.asarray(Y)
+        for i, m in enumerate(self.models):
+            m.fit(X, Y[:, i])
+        return self
+
+    def predict(self, X):
+        return np.stack([m.predict(X) for m in self.models], axis=1)
+
+
+class RandomForestRegressor:
+    """Bagged depth-unlimited-ish trees (baseline #3 in Fig 7)."""
+
+    def __init__(self, n_estimators: int = 100, max_depth: int = 8,
+                 n_bins: int = 64, subsample: float = 0.8,
+                 colsample: float = 0.8, seed: int = 0):
+        self.kw = dict(n_estimators=1, learning_rate=1.0,
+                       max_depth=max_depth, n_bins=n_bins,
+                       min_child_weight=1.0, reg_lambda=1e-6)
+        self.n_estimators = n_estimators
+        self.subsample = subsample
+        self.colsample = colsample
+        self.seed = seed
+        self.members_: List[GBTRegressor] = []
+
+    def fit(self, X, y):
+        rng = np.random.default_rng(self.seed)
+        n = len(y)
+        self.members_ = []
+        for i in range(self.n_estimators):
+            idx = rng.integers(0, n, size=n)      # bootstrap
+            m = GBTRegressor(seed=self.seed + i, subsample=1.0,
+                             colsample=self.colsample, **self.kw)
+            m.fit(X[idx], y[idx])
+            self.members_.append(m)
+        return self
+
+    def predict(self, X):
+        return np.mean([m.predict(X) for m in self.members_], axis=0)
+
+
+class LinearRegression:
+    """Ordinary least squares via normal equations (baseline #1)."""
+
+    def fit(self, X, y):
+        X = np.asarray(X, np.float64)
+        Xb = np.concatenate([X, np.ones((len(X), 1))], axis=1)
+        self.coef_, *_ = np.linalg.lstsq(Xb, np.asarray(y, np.float64),
+                                         rcond=None)
+        return self
+
+    def predict(self, X):
+        X = np.asarray(X, np.float64)
+        Xb = np.concatenate([X, np.ones((len(X), 1))], axis=1)
+        return Xb @ self.coef_

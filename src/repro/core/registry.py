@@ -1,0 +1,64 @@
+"""Per hardware/software-combination model registry (paper Alg 4).
+
+One (ExpDatabase, parameter-predictor) pair per unique configuration
+combination — e.g. (acc, acc_count, back, model, prec, mode).  The key
+columns are configurable; combinations are discovered from the data.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.database import ExpDatabase, build_exponential_database
+from repro.core.dataset import Dataset
+from repro.core.gbt import MultiOutputGBT
+from repro.core.predictor import predict_throughput, train_param_predictor
+
+DEFAULT_KEYS = ("model", "acc", "acc_count", "back", "prec", "mode")
+
+
+@dataclasses.dataclass
+class ComboModel:
+    db: Optional[ExpDatabase]
+    predictor: Optional[MultiOutputGBT]
+
+
+class ModelRegistry:
+    def __init__(self, keys: Sequence[str] = DEFAULT_KEYS):
+        self.keys = tuple(keys)
+        self.combos: Dict[Tuple, ComboModel] = {}
+
+    def fit(self, data: Dataset, **gbt_kw) -> "ModelRegistry":
+        keys = [k for k in self.keys if k in data.cols]
+        self._active_keys = tuple(keys)
+        for combo in data.unique_combos(keys):
+            sub = data
+            for k, v in zip(keys, combo):
+                sub = sub.mask(sub[k].astype(str) == v)
+            ii, oo, bb, thpt = sub.workload
+            db = build_exponential_database(ii, oo, bb, thpt)
+            pred = (train_param_predictor(db.training, **gbt_kw)
+                    if db is not None and len(db.training) >= 4 else None)
+            self.combos[combo] = ComboModel(db=db, predictor=pred)
+        return self
+
+    def _key_of(self, row: Dict) -> Tuple:
+        return tuple(str(row[k]) for k in self._active_keys)
+
+    def predict(self, data: Dataset) -> np.ndarray:
+        """Throughput prediction for every row (Alg 5 per combination)."""
+        keys = self._active_keys
+        out = np.zeros(len(data), np.float64)
+        arr = np.stack([data[k].astype(str) for k in keys], axis=1) \
+            if keys else np.zeros((len(data), 0), str)
+        ii, oo, bb, _ = data.workload
+        for combo, cm in self.combos.items():
+            mask = np.all(arr == np.asarray(combo), axis=1) if keys else \
+                np.ones(len(data), bool)
+            if not mask.any():
+                continue
+            out[mask] = predict_throughput(cm.db, cm.predictor,
+                                           ii[mask], oo[mask], bb[mask])
+        return out

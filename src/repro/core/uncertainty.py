@@ -1,0 +1,83 @@
+"""Uncertainty quantification (paper Alg 8).
+
+Confidence c = 1 / (1 + d_min), where d_min is the minimum over logged SA
+subsets of the average per-feature *histogram cosine distance* between the
+new workload's (ii, oo, bb, thpt) distribution and the subset's rows.
+Workload features are histogrammed in log space (they span decades);
+throughput in linear space over the union range.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.annealing import SALog, subset_mask
+
+N_HIST_BINS = 16
+FEATS = ("ii", "oo", "bb", "thpt")
+
+
+def _feature_bins(ref: Dict[str, np.ndarray],
+                  new: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    bins = {}
+    for f in FEATS:
+        allv = np.concatenate([ref[f], new[f]]).astype(np.float64)
+        if f == "thpt":
+            lo, hi = float(allv.min()), float(allv.max())
+            hi = hi if hi > lo else lo + 1.0
+            bins[f] = np.linspace(lo, hi, N_HIST_BINS + 1)
+        else:
+            lo = max(float(allv.min()), 1e-9)
+            hi = max(float(allv.max()), lo * (1 + 1e-9))
+            bins[f] = np.geomspace(lo, hi * (1 + 1e-9), N_HIST_BINS + 1)
+    return bins
+
+
+def _hist(vals: np.ndarray, edges: np.ndarray) -> np.ndarray:
+    h, _ = np.histogram(np.asarray(vals, np.float64), bins=edges)
+    h = h.astype(np.float64)
+    s = h.sum()
+    return h / s if s > 0 else h
+
+
+def _cosine_distance(u: np.ndarray, v: np.ndarray) -> float:
+    nu, nv = np.linalg.norm(u), np.linalg.norm(v)
+    if nu == 0 or nv == 0:
+        return 1.0
+    return float(1.0 - np.dot(u, v) / (nu * nv))
+
+
+def workload_distance(ref_rows: Dict[str, np.ndarray],
+                      new_rows: Dict[str, np.ndarray]) -> float:
+    """Average per-feature histogram cosine distance between two row sets."""
+    bins = _feature_bins(ref_rows, new_rows)
+    ds = []
+    for f in FEATS:
+        ds.append(_cosine_distance(_hist(ref_rows[f], bins[f]),
+                                   _hist(new_rows[f], bins[f])))
+    return float(np.mean(ds))
+
+
+def confidence(train, log: SALog, new,
+               max_subsets: int = 200) -> Tuple[float, float]:
+    """Alg 8 lines 4-6: (d_min, confidence) for a new workload.
+
+    ``train``/``new`` are (ii, oo, bb, thpt) tuples; logged subsets are
+    materialized as row-sets of the training data they selected.
+    """
+    ii, oo, bb, thpt = train
+    nii, noo, nbb, nthpt = new
+    new_rows = {"ii": nii, "oo": noo, "bb": nbb, "thpt": nthpt}
+    subsets = log.subsets[-max_subsets:]
+    d_min = np.inf
+    for s in subsets:
+        m = subset_mask(ii, oo, bb, s)
+        if m.sum() < 2:
+            continue
+        ref_rows = {"ii": ii[m], "oo": oo[m], "bb": bb[m], "thpt": thpt[m]}
+        d = workload_distance(ref_rows, new_rows)
+        d_min = min(d_min, d)
+    if not np.isfinite(d_min):
+        d_min = 1.0
+    return float(d_min), float(1.0 / (1.0 + d_min))

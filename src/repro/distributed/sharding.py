@@ -1,0 +1,275 @@
+"""Sharding policy: logical activation rules + parameter partition specs.
+
+Design
+------
+* A :class:`ShardingPolicy` binds a mesh to *logical rules*.  Model code
+  calls ``constrain(x, "act_qkv")`` at a handful of points; outside a policy
+  context this is a no-op, so single-device tests never touch device state.
+* Every rule is a priority list of ``(dim, axes)`` preferences.  Each
+  preference is applied greedily iff the dim size is divisible by the mesh
+  axes' product and the axes are not already used — this makes one rule set
+  work across all 10 architectures (heads that don't divide the TP width
+  fall back to sequence/context parallelism instead of failing).
+* Parameter specs are derived from (path, shape): hidden/vocab/expert dims
+  go over ``model``; ZeRO-1 additionally shards optimizer state over
+  ``data`` on the first free divisible dim.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import re
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def _axes_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+@dataclasses.dataclass
+class ShardingPolicy:
+    mesh: Mesh
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axes: Tuple[str, ...] = ("model",)
+    # rule name -> priority list of (dim, "data"|"model")
+    rules: Optional[dict] = None
+    # hillclimb knobs
+    seq_parallel_attn: bool = True      # allow CP fallback on seq dims
+    zero1: bool = True                   # shard optimizer state over data
+    shard_scores_dhead: bool = False     # last-resort d_head sharding
+    # serving: weights are read-only -> shard them over data too (2D weight
+    # sharding across the whole slice, vLLM-style full TP), bf16 params.
+    # serving_2d False keeps weights TP-only (replicated over data): no
+    # per-step weight all-gathers — the right choice whenever params fit
+    # HBM (hillclimb iteration 1; see EXPERIMENTS.md §Perf).
+    serving: bool = False
+    serving_2d: bool = True
+    # context-parallel prefill (hillclimb iteration 2): when attention
+    # heads don't divide the TP width, replicate block weights over
+    # ``model`` and shard the sequence end-to-end instead of bouncing
+    # between seq- and head-sharding per layer.
+    cp_replicate_weights: bool = False
+    # shard_map expert-parallel MoE (hillclimb iteration 3) — local
+    # dispatch + psum instead of GSPMD's replicated-buffer scatter.
+    ep_moe: bool = True
+
+    def __post_init__(self):
+        if self.rules is None:
+            self.rules = dict(DEFAULT_RULES)
+
+    def resolve(self, name: str, shape: Sequence[int]) -> P:
+        prefs = self.rules.get(name)
+        if self.cp_replicate_weights and name == "act_btd" and \
+                len(shape) >= 2:
+            prefs = [(0, "data"), (1, "model")]
+        if prefs is None:
+            return P()
+        spec = [None] * len(shape)
+        used: set = set()
+        for dim, group in prefs:
+            if dim >= len(shape) or spec[dim] is not None:
+                continue
+            axes = self.data_axes if group == "data" else self.model_axes
+            if any(a in used for a in axes):
+                continue
+            if not self.seq_parallel_attn and name.startswith("act") and \
+                    dim in (1,) and group == "model":
+                continue
+            if shape[dim] % _axes_size(self.mesh, axes) == 0:
+                spec[dim] = axes if len(axes) > 1 else axes[0]
+                used.update(axes)
+        return P(*spec)
+
+    def named(self, name: str, shape) -> NamedSharding:
+        return NamedSharding(self.mesh, self.resolve(name, shape))
+
+
+# Activation rules. dims refer to the logical layout noted per rule.
+DEFAULT_RULES = {
+    # (B, S, D)
+    "act_btd": [(0, "data"), (1, "data")],
+    # (B, S, H, Dh) query/out projections
+    "act_qkv": [(0, "data"), (2, "model"), (1, "model"), (1, "data")],
+    # (B, S, KV, Dh)
+    "act_kv": [(0, "data"), (2, "model"), (1, "model"), (1, "data")],
+    # (B, T, KV, Dh) decode-time cache — prefer sharding the long T axis
+    # over model when KV heads don't divide (distributed flash-decoding).
+    "kv_cache": [(0, "data"), (2, "model"), (1, "model"), (1, "data")],
+    # (E, C, D) MoE expert-major buffers
+    "moe_ecd": [(0, "model"), (1, "data")],
+    # (B, S, F) mlp hidden
+    "act_bsf": [(0, "data"), (2, "model"), (1, "model")],
+    # (B, L, d_inner, d_state) mamba scan states (chunk-local)
+    "mamba_h": [(0, "data"), (2, "model"), (1, "data")],
+    # (B, d_inner, d_state) mamba decode state
+    "mamba_state": [(0, "data"), (1, "model")],
+    # (B, S, d_inner)
+    "act_bsi": [(0, "data"), (2, "model"), (1, "model")],
+    # (B, H, Dq, Dv) mlstm matrix state
+    "mlstm_state": [(0, "data"), (1, "model"), (2, "model")],
+    # (B, H, Dk) mlstm normalizer
+    "mlstm_n": [(0, "data"), (1, "model")],
+    # (B, Dp) slstm scalar state
+    "slstm_state": [(0, "data"), (1, "model")],
+    # (B, dc-1, d_inner) mamba conv carry
+    "mamba_conv": [(0, "data"), (2, "model")],
+    # (B, V) / (B, S, V) logits
+    "logits": [(0, "data"), (-1, "model")],
+}
+
+
+@contextlib.contextmanager
+def use_policy(policy: Optional[ShardingPolicy]):
+    prev = getattr(_STATE, "policy", None)
+    _STATE.policy = policy
+    try:
+        yield policy
+    finally:
+        _STATE.policy = prev
+
+
+def get_policy() -> Optional[ShardingPolicy]:
+    return getattr(_STATE, "policy", None)
+
+
+def constrain(x, rule: str):
+    policy = get_policy()
+    if policy is None:
+        return x
+    spec = policy.resolve(rule, x.shape)
+    if rule == "logits":
+        # negative-dim rules resolved against concrete rank
+        spec = policy.resolve_logits(x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(policy.mesh, spec))
+
+
+def _resolve_logits(self, shape):
+    spec = [None] * len(shape)
+    if shape[0] % _axes_size(self.mesh, self.data_axes) == 0:
+        spec[0] = (self.data_axes if len(self.data_axes) > 1
+                   else self.data_axes[0])
+    if shape[-1] % _axes_size(self.mesh, self.model_axes) == 0:
+        spec[-1] = (self.model_axes if len(self.model_axes) > 1
+                    else self.model_axes[0])
+    return P(*spec)
+
+
+ShardingPolicy.resolve_logits = _resolve_logits
+
+
+# ---------------------------------------------------------------------------
+# Parameter partition specs
+# ---------------------------------------------------------------------------
+
+# (path regex, preferences) — dims are *after* stripping any leading
+# period-stack dim (handled by param_spec). "model"/"data" groups as above.
+_PARAM_RULES = [
+    (r"tok_embed$", [(0, "model")]),
+    (r"lm_head$", [(1, "model")]),
+    (r"(wq|wk|wv)$", [(1, "model"), (2, "model"), (0, "model")]),
+    (r"wo$", [(0, "model"), (1, "model"), (2, "model")]),
+    (r"(w_gate|w_up)$", [(1, "model")]),
+    (r"w_down$", [(0, "model")]),
+    # MoE experts: (E, D, F) — expert parallelism on E.
+    (r"experts/.*$", [(0, "model")]),
+    (r"router.*$", []),
+    # Mamba: shard d_inner wherever it appears.
+    (r"mamba/in_proj$", [(1, "model")]),
+    (r"mamba/(conv_w|conv_b|A_log|D|dt_bias)$", [(0, "model")]),
+    (r"mamba/x_proj$", [(0, "model")]),
+    (r"mamba/dt_proj$", [(1, "model")]),
+    (r"mamba/out_proj$", [(0, "model")]),
+    # xLSTM inner projections
+    (r"(up_proj|gate_proj)$", [(1, "model")]),
+    (r"down_proj$", [(0, "model")]),
+    (r"(wqk|wv2)$", [(1, "model")]),
+    (r"conv1d.*$", [(0, "model")]),
+]
+
+
+def param_spec(path: str, shape: Sequence[int], policy: ShardingPolicy,
+               stacked: bool = False, for_opt_state: bool = False) -> P:
+    """PartitionSpec for a parameter leaf.
+
+    ``stacked`` marks per-period scan stacks whose dim0 is the period count.
+    Optimizer-state variants (ZeRO-1) add ``data`` on the first free
+    divisible dim.
+    """
+    offset = 1 if stacked else 0
+    spec = [None] * len(shape)
+    if policy.cp_replicate_weights and stacked:
+        # context-parallel mode: block weights replicated over model;
+        # only the (huge) embedding / lm_head stay model-sharded.
+        if policy.serving and policy.serving_2d:
+            for d in range(offset, len(shape)):
+                if shape[d] % _axes_size(policy.mesh, policy.data_axes) == 0:
+                    spec[d] = (policy.data_axes if len(policy.data_axes) > 1
+                               else policy.data_axes[0])
+                    break
+        return P(*spec)
+    for pat, prefs in _PARAM_RULES:
+        if re.search(pat, path):
+            used = set()
+            for dim, group in prefs:
+                d = dim + offset
+                if d >= len(shape) or spec[d] is not None:
+                    continue
+                axes = (policy.model_axes if group == "model"
+                        else policy.data_axes)
+                if any(a in used for a in axes):
+                    continue
+                if shape[d] % _axes_size(policy.mesh, axes) == 0:
+                    spec[d] = axes if len(axes) > 1 else axes[0]
+                    used.update(axes)
+            break
+    if (for_opt_state and policy.zero1) or \
+            (policy.serving and policy.serving_2d):
+        used_names = {a for s in spec if s is not None
+                      for a in (s if isinstance(s, tuple) else (s,))}
+        if not any(a in used_names for a in policy.data_axes):
+            for d in range(len(shape)):
+                if spec[d] is None and shape[d] % _axes_size(
+                        policy.mesh, policy.data_axes) == 0:
+                    spec[d] = (policy.data_axes if len(policy.data_axes) > 1
+                               else policy.data_axes[0])
+                    break
+    return P(*spec)
+
+
+def tree_param_specs(params, policy: ShardingPolicy,
+                     for_opt_state: bool = False):
+    """Map a param pytree -> pytree of PartitionSpec (period stacks under
+    any path containing 'blocks' get their leading dim skipped)."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    specs = []
+    for keypath, leaf in flat:
+        path = "/".join(_key_str(k) for k in keypath)
+        stacked = "blocks" in path
+        specs.append(param_spec(path, leaf.shape, policy,
+                                stacked=stacked,
+                                for_opt_state=for_opt_state))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def tree_shardings(params, policy: ShardingPolicy, **kw):
+    specs = tree_param_specs(params, policy, **kw)
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(policy.mesh, s), specs,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)

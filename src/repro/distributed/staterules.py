@@ -1,0 +1,62 @@
+"""PartitionSpecs for decode caches / recurrent state (period-stacked)."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import ShardingPolicy
+from repro.models.attention import KVCache
+from repro.models.ssm import MLSTMState, MambaState, SLSTMState
+from repro.models.transformer import DecodeCache
+
+
+def _prepend_none(spec: P) -> P:
+    return P(None, *spec)
+
+
+def _state_spec(policy: ShardingPolicy, st, stacked: bool):
+    """Spec pytree for one block state (shapes possibly period-stacked)."""
+    off = 1 if stacked else 0
+
+    def shp(t):
+        return t.shape[off:]
+
+    if isinstance(st, KVCache):
+        s = policy.resolve("kv_cache", shp(st.k))
+        s = _prepend_none(s) if stacked else s
+        return KVCache(k=s, v=s)
+    if isinstance(st, MambaState):
+        conv = policy.resolve("mamba_conv", shp(st.conv))
+        ssm = policy.resolve("mamba_state", shp(st.ssm))
+        if stacked:
+            conv, ssm = _prepend_none(conv), _prepend_none(ssm)
+        return MambaState(conv=conv, ssm=ssm)
+    if isinstance(st, MLSTMState):
+        c = policy.resolve("mlstm_state", shp(st.C))
+        n = policy.resolve("mlstm_n", shp(st.n))
+        if stacked:
+            c, n = _prepend_none(c), _prepend_none(n)
+        return MLSTMState(C=c, n=n)
+    if isinstance(st, SLSTMState):
+        s = policy.resolve("slstm_state", shp(st.c))
+        s = _prepend_none(s) if stacked else s
+        return SLSTMState(c=s, n=s, h=s)
+    if st is None:
+        return None
+    raise TypeError(type(st))
+
+
+def decode_cache_specs(policy: ShardingPolicy, cache: DecodeCache):
+    blocks = tuple(_state_spec(policy, st, stacked=True)
+                   for st in cache.blocks)
+    cross = None
+    if cache.cross is not None:
+        cross = tuple(_state_spec(policy, kv, stacked=True)
+                      for kv in cache.cross)
+    return DecodeCache(blocks=blocks, cross=cross, pos=P())
+
+
+def decode_cache_shardings(policy: ShardingPolicy, cache: DecodeCache):
+    specs = decode_cache_specs(policy, cache)
+    return jax.tree.map(lambda s: NamedSharding(policy.mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))

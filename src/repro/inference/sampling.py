@@ -1,0 +1,23 @@
+"""Token sampling: greedy / temperature / top-k."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample(logits, key, temperature: float = 0.0, top_k: int = 0,
+           vocab_size: int | None = None):
+    """logits: (B, 1, V) -> tokens (B, 1) int32."""
+    logits = logits[:, -1, :].astype(jnp.float32)
+    if vocab_size is not None:
+        # mask vocab padding
+        logits = jnp.where(jnp.arange(logits.shape[-1]) < vocab_size,
+                           logits, -jnp.inf)
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+    logits = logits / temperature
+    if top_k > 0:
+        kth = jnp.sort(logits, axis=-1)[:, -top_k][:, None]
+        logits = jnp.where(logits >= kth, logits, -jnp.inf)
+    return jax.random.categorical(key, logits, axis=-1).astype(
+        jnp.int32)[:, None]

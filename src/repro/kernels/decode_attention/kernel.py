@@ -1,0 +1,104 @@
+"""Decode (single-query) attention Pallas TPU kernel — flash-decoding.
+
+TPU adaptation of FlashDecoding [arXiv:2311.01282]: the KV length is split
+across the last (sequential) grid axis; partial (max, sum, acc) statistics
+live in VMEM scratch and are merged online, so the kernel is a pure
+KV-bandwidth streamer — the regime that dominates decode throughput and
+that ALA's exponential saturation model captures.
+
+The query token is masked against ``pos`` (the number of valid cache
+entries) with an elementwise iota compare, so one compiled kernel serves
+any fill level.  ``pos`` arrives via scalar prefetch (SMEM) — the TPU
+analogue of passing it in registers.
+
+Layout: q (B, KV, G, Dh) grouped query heads; k/v (B, KV, T, Dh).
+Grid (B, KV, nT).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *,
+                   scale: float, block_t: int, n_t_blocks: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[0]
+    # skip blocks entirely beyond the valid prefix
+    @pl.when(it * block_t <= pos)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)             # (G, Dh)
+        k = k_ref[0, 0].astype(jnp.float32)             # (bt, Dh)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ()))) * scale      # (G, bt)
+        t_idx = it * block_t + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(t_idx <= pos, s, NEG_INF)
+        m_prev = m_ref[...]                              # (G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(it == n_t_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_grouped(q, k, v, pos, *, scale: float | None = None,
+                             block_t: int = 512, interpret: bool = False):
+    """q: (B, KV, G, Dh); k/v: (B, KV, T, Dh); pos: () int32.
+
+    Attends to cache positions <= pos. Returns (B, KV, G, Dh)."""
+    b, kv, g, dh = q.shape
+    _, _, t, _ = k.shape
+    block_t = min(block_t, t)
+    assert t % block_t == 0
+    nt = t // block_t
+    scale = scale if scale is not None else 1.0 / (dh ** 0.5)
+    grid = (b, kv, nt)
+    kernel = functools.partial(_decode_kernel, scale=scale,
+                               block_t=block_t, n_t_blocks=nt)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dh), lambda ib, ih, it, pos: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, block_t, dh),
+                         lambda ib, ih, it, pos: (ib, ih, it, 0)),
+            pl.BlockSpec((1, 1, block_t, dh),
+                         lambda ib, ih, it, pos: (ib, ih, it, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dh),
+                               lambda ib, ih, it, pos: (ib, ih, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dh), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, dh), q.dtype),
+        interpret=interpret,
+    )(jnp.asarray(pos, jnp.int32).reshape(1), q, k, v)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for single-query (decode) attention with fill mask."""
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, pos, scale: float | None = None):
+    """q: (B, KV, G, Dh); k/v: (B, KV, T, Dh); attend to t <= pos."""
+    b, kv, g, dh = q.shape
+    t = k.shape[2]
+    scale = scale if scale is not None else 1.0 / (dh ** 0.5)
+    s = jnp.einsum("bhgd,bhtd->bhgt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = jnp.arange(t)[None, None, None, :] <= pos
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgt,bhtd->bhgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

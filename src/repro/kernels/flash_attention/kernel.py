@@ -1,0 +1,114 @@
+"""Flash attention (prefill) Pallas TPU kernel — causal GQA.
+
+TPU adaptation of FlashAttention-2 [arXiv:2307.08691]: the online-softmax
+accumulation runs over a *grid* dimension (TPU grids execute sequentially
+over the last axis with VMEM scratch carried across iterations) instead of
+a CUDA thread-block loop.  Block shapes keep the MXU fed: q/k tiles are
+(block_q, d_head) x (block_k, d_head) with d_head in {64, 128} — both
+MXU-aligned (128 lanes).
+
+Layout: q (B, H, S, Dh); k/v (B, KV, S, Dh).  GQA maps query head h to kv
+head h // (H // KV) inside the BlockSpec index maps — no KV replication in
+HBM.
+
+Causality: kv blocks strictly above the diagonal are skipped via
+``pl.when`` (no FLOPs, no VMEM traffic beyond the prefetched tile);
+diagonal blocks apply an elementwise mask.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, block_q: int, block_k: int,
+                  n_kv_blocks: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    run = True
+    if causal:
+        # kv block strictly above the diagonal -> nothing to do
+        run = (ik * block_k) <= (iq * block_q + block_q - 1)
+
+    @pl.when(run if causal else (ik >= 0))
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, dh)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, dh)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ()))) * scale     # (bq, bk)
+        if causal:
+            rows = iq * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            cols = ik * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+        m_prev = m_ref[...]                             # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                          # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool = True,
+                         scale: float | None = None, block_q: int = 512,
+                         block_k: int = 512, interpret: bool = False):
+    """q: (B, H, S, Dh); k/v: (B, KV, S, Dh). Returns (B, H, S, Dh)."""
+    b, h, s, dh = q.shape
+    _, kv, sk, _ = k.shape
+    assert h % kv == 0
+    block_q = min(block_q, s)
+    block_k = min(block_k, sk)
+    assert s % block_q == 0 and sk % block_k == 0
+    scale = scale if scale is not None else 1.0 / (dh ** 0.5)
+    nq, nk = s // block_q, sk // block_k
+    grid = (b, h, nq, nk)
+    group = h // kv
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, block_q=block_q,
+        block_k=block_k, n_kv_blocks=nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dh),
+                         lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda ib, ih, iq, ik: (ib, ih // group, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda ib, ih, iq, ik: (ib, ih // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dh),
+                               lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

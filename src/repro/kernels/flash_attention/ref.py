@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for flash attention (GQA, optional causal)."""
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True, scale: float | None = None):
+    """q: (B, H, S, Dh); k/v: (B, KV, Sk, Dh) -> (B, H, S, Dh)."""
+    b, h, s, dh = q.shape
+    _, kv, sk, _ = k.shape
+    group = h // kv
+    scale = scale if scale is not None else 1.0 / (dh ** 0.5)
+    qg = q.reshape(b, kv, group, s, dh)
+    scores = jnp.einsum("bhgqd,bhkd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        idx = jnp.arange(s)[:, None] >= jnp.arange(sk)[None, :]
+        scores = jnp.where(idx[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, v.astype(jnp.float32))
+    return out.reshape(b, h, s, dh).astype(q.dtype)

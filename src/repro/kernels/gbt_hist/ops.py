@@ -1,0 +1,32 @@
+"""Jit'd public wrapper for the GBT histogram kernel (pads + dispatches)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gbt_hist.kernel import gbt_hist as gbt_hist_kernel
+from repro.kernels.gbt_hist.ref import gbt_hist_ref
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins", "block_f", "block_n",
+                                             "force"))
+def build_histograms(bins, grad, hess, n_bins: int, block_f: int = 8,
+                     block_n: int = 512, force: str | None = None):
+    """bins: (n, f) int32; grad/hess: (n,) -> (f, n_bins, 2) fp32."""
+    mode = force or ("kernel" if jax.default_backend() == "tpu" else "ref")
+    if mode == "ref":
+        return gbt_hist_ref(bins, grad, hess, n_bins)
+    n, f = bins.shape
+    bn = min(block_n, max(8, n))
+    pad_n = (-n) % bn
+    bf = min(block_f, f)
+    pad_f = (-f) % bf
+    if pad_n or pad_f:
+        bins = jnp.pad(bins, ((0, pad_n), (0, pad_f)))
+        grad = jnp.pad(grad, (0, pad_n))
+        hess = jnp.pad(hess, (0, pad_n))
+    out = gbt_hist_kernel(bins, grad, hess, n_bins=n_bins, block_f=bf,
+                          block_n=bn, interpret=(mode == "interpret"))
+    return out[:f]

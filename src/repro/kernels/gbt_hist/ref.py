@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the GBT gradient/hessian histogram."""
+import jax.numpy as jnp
+
+
+def gbt_hist_ref(bins, grad, hess, n_bins: int):
+    """bins: (n, f) int32; grad/hess: (n,) -> (f, n_bins, 2) fp32."""
+    onehot = (bins[..., None] ==
+              jnp.arange(n_bins)[None, None, :]).astype(jnp.float32)
+    hg = jnp.einsum("nfb,n->fb", onehot, grad.astype(jnp.float32))
+    hh = jnp.einsum("nfb,n->fb", onehot, hess.astype(jnp.float32))
+    return jnp.stack([hg, hh], axis=-1)

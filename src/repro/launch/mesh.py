@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state.  Single pod: 256 chips as (data=16, model=16).
+Multi-pod: 2 pods x 256 chips as (pod=2, data=16, model=16); the ``pod``
+axis carries only data-parallel gradient all-reduce (DCN-friendly).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Tiny mesh over the real host devices (tests / CPU demos)."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def data_axes_of(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axes_of(mesh) -> tuple:
+    return ("model",)

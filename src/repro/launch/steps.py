@@ -1,0 +1,128 @@
+"""Step builders shared by the dry-run, trainer and server.
+
+Each builder returns (step_fn, in_shardings, out_shardings, arg_structs)
+ready for ``jax.jit(...).lower(...)``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import ShapeSpec
+from repro.distributed.sharding import ShardingPolicy, tree_shardings
+from repro.distributed.staterules import decode_cache_shardings
+from repro.models.io import input_specs
+from repro.models.transformer import Model
+from repro.training.optimizer import (
+    AdamWConfig, AdamWState, adamw_init, adamw_update)
+
+
+def batch_shardings(policy: ShardingPolicy, specs):
+    """Tokens/labels shard over data on dim0; frontend embeds likewise."""
+    out = {}
+    for name, s in specs.items():
+        spec = policy.resolve("act_btd", s.shape)
+        out[name] = NamedSharding(policy.mesh, spec)
+    return out
+
+
+def build_train_step(model: Model, policy: ShardingPolicy, shape: ShapeSpec,
+                     opt_cfg: Optional[AdamWConfig] = None):
+    opt_cfg = opt_cfg or AdamWConfig()
+    cfg = model.cfg
+
+    params_s = jax.eval_shape(
+        functools.partial(model.init), jax.random.key(0))
+    opt_s = jax.eval_shape(adamw_init, params_s)
+    in_specs = input_specs(cfg, shape)
+
+    p_shard = tree_shardings(params_s, policy)
+    mv_shard = tree_shardings(params_s, policy, for_opt_state=True)
+
+    def constrain_update(delta):
+        # keep the fused Adam delta in the ZeRO layout -> one gather
+        return jax.tree.map(jax.lax.with_sharding_constraint, delta,
+                            mv_shard)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.train_loss)(params, batch)
+        params, opt_state, metrics = adamw_update(
+            opt_cfg, params, grads, opt_state,
+            constrain_update=constrain_update)
+        return params, opt_state, loss, metrics
+    o_shard = AdamWState(step=NamedSharding(policy.mesh, P()),
+                         m=mv_shard, v=mv_shard)
+    b_shard = batch_shardings(policy, in_specs)
+    metric_shard = {"grad_norm": NamedSharding(policy.mesh, P()),
+                    "lr": NamedSharding(policy.mesh, P())}
+    in_shardings = (p_shard, o_shard, b_shard)
+    out_shardings = (p_shard, o_shard, NamedSharding(policy.mesh, P()),
+                     metric_shard)
+    args = (params_s, opt_s, in_specs)
+    return train_step, in_shardings, out_shardings, args
+
+
+def build_prefill_step(model: Model, policy: ShardingPolicy,
+                       shape: ShapeSpec):
+    cfg = model.cfg
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, max_len=shape.seq_len)
+
+    params_s = jax.eval_shape(model.init, jax.random.key(0))
+    in_specs = input_specs(cfg, shape)
+    p_shard = tree_shardings(params_s, policy)
+    b_shard = batch_shardings(policy, in_specs)
+
+    cache_s = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    c_shard = decode_cache_shardings(policy, cache_s)
+    logits_shard = NamedSharding(
+        policy.mesh, policy.resolve_logits(
+            (shape.global_batch, 1, cfg.padded_vocab)))
+    in_shardings = (p_shard, b_shard)
+    out_shardings = (logits_shard, c_shard)
+    args = (params_s, in_specs)
+    return prefill_step, in_shardings, out_shardings, args
+
+
+def build_serve_step(model: Model, policy: ShardingPolicy,
+                     shape: ShapeSpec):
+    """One-token decode against a seq_len-deep cache (the shape's
+    ``decode_*`` semantics: one new token, KV cache of seq_len)."""
+    cfg = model.cfg
+
+    def serve_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    params_s = jax.eval_shape(model.init, jax.random.key(0))
+    cache_s = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                 filled=shape.seq_len - 1))
+    tok_s = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+
+    p_shard = tree_shardings(params_s, policy)
+    c_shard = decode_cache_shardings(policy, cache_s)
+    t_shard = NamedSharding(policy.mesh,
+                            policy.resolve("act_btd", tok_s.shape))
+    logits_shard = NamedSharding(
+        policy.mesh, policy.resolve_logits(
+            (shape.global_batch, 1, cfg.padded_vocab)))
+    in_shardings = (p_shard, c_shard, t_shard)
+    out_shardings = (logits_shard, c_shard)
+    args = (params_s, cache_s, tok_s)
+    return serve_step, in_shardings, out_shardings, args
+
+
+def build_step(model: Model, policy: ShardingPolicy, shape: ShapeSpec):
+    if shape.kind == "train":
+        return build_train_step(model, policy, shape)
+    if shape.kind == "prefill":
+        return build_prefill_step(model, policy, shape)
+    if shape.kind == "decode":
+        return build_serve_step(model, policy, shape)
+    raise ValueError(shape.kind)

@@ -1,0 +1,227 @@
+"""Grouped-query attention with RoPE, optional QKV bias / QK-norm, KV cache.
+
+Three entry points:
+  * ``attend_full``   — train / prefill over a whole sequence (causal or not),
+  * ``attend_decode`` — one new token against a pre-allocated KV cache,
+  * ``attend_cross``  — encoder-decoder cross attention.
+
+The score/softmax math lives in ``_sdpa`` (the pure-jnp oracle that the
+Pallas flash kernels are checked against).  ``use_flash``/``use_decode_kernel``
+switch in the Pallas TPU kernels; the default jnp path is what the CPU
+dry-run lowers (XLA fuses it into the same logical cost).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, dense_init
+from repro.distributed.sharding import constrain
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, T, KV, Dh)
+    v: jax.Array  # (B, T, KV, Dh)
+
+
+def init_attention(cfg: ModelConfig, key, cross: bool = False):
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h, dh), cfg.param_dtype),
+        "wk": dense_init(ks[1], (d, kv, dh), cfg.param_dtype),
+        "wv": dense_init(ks[2], (d, kv, dh), cfg.param_dtype),
+        "wo": dense_init(ks[3], (h, dh, d), cfg.param_dtype, in_axis=0),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((h, dh), cfg.param_dtype)
+        p["bk"] = jnp.zeros((kv, dh), cfg.param_dtype)
+        p["bv"] = jnp.zeros((kv, dh), cfg.param_dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), cfg.param_dtype)
+        p["k_norm"] = jnp.ones((dh,), cfg.param_dtype)
+    return p
+
+
+def _project_q(cfg, params, x):
+    dtype = cfg.compute_dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dtype))
+    if "bq" in params:
+        q = q + params["bq"].astype(dtype)
+    if cfg.qk_norm:
+        q = _head_rmsnorm(q, params["q_norm"], cfg.norm_eps)
+    return q
+
+
+def _project_kv(cfg, params, x):
+    dtype = cfg.compute_dtype
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dtype))
+    if "bk" in params:
+        k = k + params["bk"].astype(dtype)
+        v = v + params["bv"].astype(dtype)
+    if cfg.qk_norm:
+        k = _head_rmsnorm(k, params["k_norm"], cfg.norm_eps)
+    return k, v
+
+
+def _head_rmsnorm(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _sdpa(q, k, v, mask, scale):
+    """Reference scaled-dot-product attention.
+
+    q: (B, Sq, KV, G, Dh) grouped; k/v: (B, Sk, KV, Dh); mask broadcastable
+    to (B, KV, G, Sq, Sk) or None.
+    """
+    scores = jnp.einsum("bqhgk,bshk->bhgqs", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhgqs,bshk->bqhgk", probs, v)
+
+
+CHUNKED_ATTN_MIN_SEQ = 8_192
+CHUNK_KV = 2_048
+
+
+def _sdpa_chunked(q, k, v, scale, causal: bool, chunk: int = CHUNK_KV):
+    """Online-softmax attention scanned over KV chunks (perf iteration #5).
+
+    The jnp twin of the Pallas flash kernel: XLA never materializes the
+    (Sq, Sk) score matrix — the working set per step is (B, Sq, KV, G,
+    chunk), cutting the memory roofline term ~Sk/chunk-fold for long
+    prefill/train sequences.  Exactly matches ``_sdpa`` output (same
+    masking semantics) and is used automatically for Sk >=
+    CHUNKED_ATTN_MIN_SEQ.
+    """
+    b, sq, kvh, g, dh = q.shape
+    sk = k.shape[1]
+    assert sk % chunk == 0, (sk, chunk)
+    n_chunks = sk // chunk
+    qf = q.astype(jnp.float32)
+    kc = k.reshape(b, n_chunks, chunk, kvh, dh).swapaxes(0, 1)
+    vc = v.reshape(b, n_chunks, chunk, kvh, dh).swapaxes(0, 1)
+    q_pos = jnp.arange(sq)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kb, vb, idx = inp
+        s = jnp.einsum("bqhgk,bshk->bqhgs", qf,
+                       kb.astype(jnp.float32)) * scale
+        if causal:
+            kv_pos = idx * chunk + jnp.arange(chunk)
+            keep = q_pos[:, None] >= kv_pos[None, :]
+            s = jnp.where(keep[None, :, None, None, :], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l = alpha * l + jnp.sum(p, axis=-1)
+        acc = alpha[..., None] * acc + jnp.einsum(
+            "bqhgs,bshk->bqhgk", p, vb.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, sq, kvh, g), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, sq, kvh, g), jnp.float32)
+    acc0 = jnp.zeros((b, sq, kvh, g, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.astype(q.dtype)
+
+
+def _group(q, n_kv):
+    b, s, h, dh = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, dh)
+
+
+def attend_full(cfg: ModelConfig, params, x, positions,
+                causal: Optional[bool] = None, use_flash: bool = False):
+    """Full-sequence attention (train / prefill). Returns (out, KVCache)."""
+    causal = cfg.causal if causal is None else causal
+    q = _project_q(cfg, params, x)
+    k, v = _project_kv(cfg, params, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "act_qkv")
+    k = constrain(k, "act_kv")
+    v = constrain(v, "act_kv")
+    scale = 1.0 / (cfg.d_head ** 0.5)
+    if use_flash:
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(q, k, v, causal=causal, scale=scale)
+    elif (x.shape[1] >= CHUNKED_ATTN_MIN_SEQ
+          and x.shape[1] % CHUNK_KV == 0
+          and cfg.sliding_window is None):
+        out = _sdpa_chunked(_group(q, cfg.n_kv_heads), k, v, scale, causal)
+        out = out.reshape(x.shape[0], x.shape[1], cfg.n_heads, cfg.d_head)
+    else:
+        s = x.shape[1]
+        mask = None
+        if causal:
+            idx = jnp.arange(s)
+            mask = (idx[:, None] >= idx[None, :])[None, None, None]
+        if cfg.sliding_window is not None:
+            idx = jnp.arange(s)
+            w = (idx[:, None] - idx[None, :]) < cfg.sliding_window
+            win = w[None, None, None]
+            mask = win if mask is None else (mask & win)
+        out = _sdpa(_group(q, cfg.n_kv_heads), k, v, mask, scale)
+        out = out.reshape(x.shape[0], s, cfg.n_heads, cfg.d_head)
+    out = constrain(out, "act_qkv")
+    out = jnp.einsum("bshk,hkd->bsd",
+                     out, params["wo"].astype(cfg.compute_dtype))
+    return out, KVCache(k=k, v=v)
+
+
+def attend_decode(cfg: ModelConfig, params, x, cache: KVCache, pos,
+                  use_kernel: bool = False):
+    """One-token decode. ``x``: (B, 1, D); ``pos``: scalar index of the new
+    token. Writes K/V at ``pos`` and attends to positions <= pos."""
+    b = x.shape[0]
+    q = _project_q(cfg, params, x)                   # (B,1,H,Dh)
+    k_new, v_new = _project_kv(cfg, params, x)       # (B,1,KV,Dh)
+    posv = jnp.full((b, 1), pos, dtype=jnp.int32)
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k_new = apply_rope(k_new, posv, cfg.rope_theta)
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new.astype(cache.k.dtype), pos, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new.astype(cache.v.dtype), pos, axis=1)
+    k = constrain(k, "kv_cache")
+    v = constrain(v, "kv_cache")
+    scale = 1.0 / (cfg.d_head ** 0.5)
+    if use_kernel:
+        from repro.kernels.decode_attention import ops as da_ops
+        out = da_ops.decode_attention(q[:, 0], k, v, pos, scale=scale)[:, None]
+    else:
+        t = k.shape[1]
+        mask = (jnp.arange(t) <= pos)[None, None, None, None, :]
+        out = _sdpa(_group(q, cfg.n_kv_heads), k, v, mask, scale)
+        out = out.reshape(b, 1, cfg.n_heads, cfg.d_head)
+    out = jnp.einsum("bshk,hkd->bsd",
+                     out, params["wo"].astype(cfg.compute_dtype))
+    return out, KVCache(k=k, v=v)
+
+
+def attend_cross(cfg: ModelConfig, params, x, memory_kv: KVCache):
+    """Cross attention against precomputed encoder K/V (no RoPE)."""
+    q = _project_q(cfg, params, x)
+    scale = 1.0 / (cfg.d_head ** 0.5)
+    out = _sdpa(_group(q, cfg.n_kv_heads), memory_kv.k, memory_kv.v,
+                None, scale)
+    out = out.reshape(x.shape[0], x.shape[1], cfg.n_heads, cfg.d_head)
+    return jnp.einsum("bshk,hkd->bsd",
+                      out, params["wo"].astype(cfg.compute_dtype))
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  dtype=None) -> KVCache:
+    dtype = dtype or cfg.compute_dtype
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.d_head)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))

@@ -1,0 +1,61 @@
+"""Model input construction: ShapeDtypeStruct specs (dry-run) and concrete
+batches (tests / real runs) from an (arch config, ShapeSpec) cell."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.shapes import ShapeSpec
+from repro.models.config import ModelConfig
+
+
+def _token_shapes(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, tuple]:
+    b, s = shape.global_batch, shape.seq_len
+    out = {}
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend == "vision":
+            text = s - cfg.n_patches
+            out["tokens"] = (b, text)
+            out["patches"] = (b, cfg.n_patches, cfg.d_model)
+            if shape.kind == "train":
+                out["labels"] = (b, text)
+        else:
+            out["tokens"] = (b, s)
+            if shape.kind == "train":
+                out["labels"] = (b, s)
+        if cfg.frontend == "audio":
+            out["frames"] = (b, cfg.encoder_seq, cfg.d_model)
+    else:  # decode
+        out["tokens"] = (b, 1)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Weak-type-correct ShapeDtypeStruct stand-ins; no device allocation."""
+    shapes = _token_shapes(cfg, shape)
+    specs = {}
+    for name, shp in shapes.items():
+        if name in ("tokens", "labels"):
+            specs[name] = jax.ShapeDtypeStruct(shp, jnp.int32)
+        else:
+            specs[name] = jax.ShapeDtypeStruct(shp, cfg.compute_dtype)
+    return specs
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeSpec, seed: int = 0):
+    """Concrete random batch matching input_specs (for smoke tests)."""
+    rng = np.random.default_rng(seed)
+    shapes = _token_shapes(cfg, shape)
+    batch = {}
+    for name, shp in shapes.items():
+        if name in ("tokens", "labels"):
+            batch[name] = jnp.asarray(
+                rng.integers(0, cfg.vocab_size, size=shp, dtype=np.int32))
+        else:
+            batch[name] = jnp.asarray(
+                rng.standard_normal(shp, dtype=np.float32),
+                dtype=cfg.compute_dtype)
+    return batch

@@ -1,0 +1,126 @@
+"""Core layer primitives shared by every architecture family.
+
+All ``init_*`` functions return plain dict pytrees; ``apply`` functions are
+pure.  Parameters are created in ``cfg.param_dtype`` and compute happens in
+``cfg.compute_dtype`` (mixed precision), with norms/softmax accumulated in
+fp32.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, in_axis: int = 0):
+    """Truncated-normal fan-in init (matches common LLM practice)."""
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else 1
+    std = 1.0 / jnp.sqrt(jnp.maximum(fan_in, 1)).astype(jnp.float32)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(cfg: ModelConfig, dim: Optional[int] = None):
+    return {"scale": jnp.ones((dim or cfg.d_model,), cfg.param_dtype)}
+
+
+def rmsnorm(x, params, eps: float = 1e-5, use_kernel: bool = False):
+    if use_kernel:
+        from repro.kernels.rmsnorm import ops as rms_ops
+        return rms_ops.rmsnorm(x, params["scale"], eps=eps)
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(d_head: int, theta: float):
+    exponent = jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head
+    return 1.0 / (theta ** exponent)  # (d_head/2,)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    d_head = x.shape[-1]
+    inv_freq = rope_frequencies(d_head, theta)
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # (...,S,Dh/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, Dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    rx1 = x1 * cos - x2 * sin
+    rx2 = x2 * cos + x1 * sin
+    return jnp.concatenate([rx1, rx2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ModelConfig, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": dense_init(k1, (d, f), cfg.param_dtype),
+        "w_up": dense_init(k2, (d, f), cfg.param_dtype),
+        "w_down": dense_init(k3, (f, d), cfg.param_dtype),
+    }
+
+
+def mlp(cfg: ModelConfig, params, x):
+    dtype = cfg.compute_dtype
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(dtype))
+    u = jnp.einsum("...d,df->...f", x, params["w_up"].astype(dtype))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("...f,fd->...d", h, params["w_down"].astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / LM head
+# ---------------------------------------------------------------------------
+
+def init_embeddings(cfg: ModelConfig, key):
+    k1, k2 = jax.random.split(key)
+    p = {"tok_embed": dense_init(k1, (cfg.padded_vocab, cfg.d_model),
+                                 cfg.param_dtype, in_axis=1)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(k2, (cfg.d_model, cfg.padded_vocab),
+                                  cfg.param_dtype)
+    return p
+
+
+def embed(cfg: ModelConfig, params, tokens):
+    # one-hot-free gather; cast to compute dtype after lookup
+    return params["tok_embed"][tokens].astype(cfg.compute_dtype)
+
+
+def lm_logits(cfg: ModelConfig, params, x):
+    w = (params["tok_embed"].T if cfg.tie_embeddings
+         else params["lm_head"]).astype(cfg.compute_dtype)
+    return jnp.einsum("...d,dv->...v", x, w)
+
+
+def cross_entropy(logits, labels, vocab_size: int):
+    """Mean CE in fp32; labels >= vocab_size (padding) are masked."""
+    logits = logits.astype(jnp.float32)
+    mask = (labels >= 0) & (labels < vocab_size)
+    safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1)

@@ -1,0 +1,108 @@
+"""Mixture-of-Experts FFN (top-1 / top-k) with sorted capacity dispatch.
+
+TPU-idiomatic implementation: instead of a dense (tokens, E, C) dispatch
+tensor (GShard-style, infeasible at 1M-token prefill), tokens are sorted by
+expert id, ranked within their expert via a searchsorted offset, and
+gathered into an (E, C, D) expert-major buffer — O(tokens·D) memory.  Tokens
+beyond an expert's capacity are dropped (standard capacity-factor
+semantics); their residual path passes through untouched.
+
+Expert weights are (E, D, F) / (E, F, D) and shard over the ``model`` axis
+(expert parallelism); the gather/scatter across the sharded E dim is where
+GSPMD inserts the all-to-all that shows up in the collective roofline term.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+from repro.distributed.sharding import constrain
+
+
+def init_moe(cfg: ModelConfig, key):
+    d, f, e = cfg.d_model, cfg.expert_d_ff, cfg.n_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "router": dense_init(k1, (d, e), cfg.param_dtype),
+        "experts": {
+            "w_gate": dense_init(k2, (e, d, f), cfg.param_dtype, in_axis=1),
+            "w_up": dense_init(k3, (e, d, f), cfg.param_dtype, in_axis=1),
+            "w_down": dense_init(k4, (e, f, d), cfg.param_dtype, in_axis=1),
+        },
+    }
+
+
+def expert_capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    cap = int(cfg.capacity_factor * cfg.top_k * n_tokens / cfg.n_experts)
+    return max(8, ((cap + 7) // 8) * 8)
+
+
+def moe_ffn(cfg: ModelConfig, params, x):
+    """x: (B, S, D) -> (B, S, D), plus aux load-balancing loss.
+
+    Dispatches to the shard_map expert-parallel path when a sharding
+    policy with ``ep_moe`` is active and experts divide the TP width
+    (see repro.distributed.ep_moe); otherwise the GSPMD path below."""
+    from repro.distributed.sharding import get_policy
+    policy = get_policy()
+    if policy is not None and policy.ep_moe:
+        from repro.distributed.ep_moe import ep_available, moe_ffn_ep
+        if ep_available(cfg, policy, batch=x.shape[0], seq=x.shape[1]):
+            return moe_ffn_ep(cfg, params, x, policy)
+    b, s, d = x.shape
+    n_tokens = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    cap = expert_capacity(cfg, n_tokens)
+    dtype = cfg.compute_dtype
+
+    xt = x.reshape(n_tokens, d)
+    logits = jnp.einsum("td,de->te", xt,
+                        params["router"].astype(dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)       # (T, k)
+    if k > 1:
+        gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # Aux loss (Switch-style load balancing).
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jax.nn.one_hot(gate_idx[:, 0], e, dtype=jnp.float32), axis=0)
+    aux = e * jnp.sum(me * ce)
+
+    # ---- sorted capacity dispatch -------------------------------------
+    flat_expert = gate_idx.reshape(-1)                  # (T*k,)
+    flat_gate = gate_vals.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(n_tokens), k) if k > 1 else \
+        jnp.arange(n_tokens)
+
+    order = jnp.argsort(flat_expert)
+    se = flat_expert[order]
+    st = flat_token[order]
+    sg = flat_gate[order]
+    # rank of each entry within its expert
+    starts = jnp.searchsorted(se, jnp.arange(e))
+    rank = jnp.arange(se.shape[0]) - starts[se]
+    keep = rank < cap
+    slot_e = jnp.where(keep, se, 0)
+    slot_c = jnp.where(keep, rank, 0)
+
+    gathered = xt[st] * keep[:, None].astype(dtype)     # (T*k, D)
+    buf = jnp.zeros((e, cap, d), dtype)
+    buf = buf.at[slot_e, slot_c].add(gathered)
+    buf = constrain(buf, "moe_ecd")
+
+    w = params["experts"]
+    g = jnp.einsum("ecd,edf->ecf", buf, w["w_gate"].astype(dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, w["w_up"].astype(dtype))
+    h = jax.nn.silu(g) * u
+    out_buf = jnp.einsum("ecf,efd->ecd", h, w["w_down"].astype(dtype))
+    out_buf = constrain(out_buf, "moe_ecd")
+
+    # ---- combine back ---------------------------------------------------
+    expert_out = out_buf[slot_e, slot_c]                # (T*k, D)
+    expert_out = expert_out * (sg * keep).astype(dtype)[:, None]
+    yt = jnp.zeros_like(xt)
+    yt = yt.at[st].add(expert_out)
+    return yt.reshape(b, s, d), aux

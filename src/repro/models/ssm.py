@@ -1,0 +1,370 @@
+"""State-space / recurrent mixers: Mamba (selective SSM) and xLSTM blocks.
+
+Mamba uses a *chunked* selective scan: the (B, L, d_inner, d_state) hidden
+states are materialized one chunk at a time inside a ``lax.scan`` over
+chunks, carrying only the (B, d_inner, d_state) boundary state.  This keeps
+both the traced HLO and the working set O(chunk), which is what makes the
+jamba 32k-prefill dry-run compile.
+
+xLSTM: mLSTM is chunkwise-parallel linear attention with scalar per-head
+decay (matrix memory); sLSTM is a genuinely sequential scan (recurrent gate
+coupling through h_{t-1}), executed with ``lax.scan`` over time steps.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+from repro.distributed.sharding import constrain
+
+MAMBA_CHUNK = 16
+MLSTM_CHUNK = 64
+
+
+# ===========================================================================
+# Mamba
+# ===========================================================================
+
+class MambaState(NamedTuple):
+    conv: jax.Array  # (B, d_conv-1, d_inner) trailing inputs
+    ssm: jax.Array   # (B, d_inner, d_state)
+
+
+def init_mamba(cfg: ModelConfig, key):
+    d, di, ds = cfg.d_model, cfg.mamba_d_inner, cfg.mamba_d_state
+    dtr, dc = cfg.dt_rank, cfg.mamba_d_conv
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {"mamba": {
+        "in_proj": dense_init(ks[0], (d, 2 * di), cfg.param_dtype),
+        "conv_w": dense_init(ks[1], (di, dc), cfg.param_dtype, in_axis=1),
+        "conv_b": jnp.zeros((di,), cfg.param_dtype),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * ds), cfg.param_dtype),
+        "dt_proj": dense_init(ks[3], (dtr, di), cfg.param_dtype),
+        "dt_bias": jnp.full((di,), -4.6, cfg.param_dtype),  # softplus ~ 0.01
+        "A_log": jnp.log(A).astype(cfg.param_dtype),
+        "D": jnp.ones((di,), cfg.param_dtype),
+        "out_proj": dense_init(ks[4], (di, d), cfg.param_dtype),
+    }}
+
+
+def _mamba_inner(cfg, p, xz, conv_carry):
+    """Shared pre-SSM path. xz: (B, S, d_model) -> x,(B,S,di) gate z."""
+    dtype = cfg.compute_dtype
+    proj = jnp.einsum("bsd,de->bse", xz, p["in_proj"].astype(dtype))
+    x, z = jnp.split(proj, 2, axis=-1)
+    return x, z
+
+
+def _causal_conv(cfg, p, x, carry=None):
+    """Depthwise causal conv over seq. x: (B,S,di); carry: (B,dc-1,di)."""
+    dc = cfg.mamba_d_conv
+    dtype = x.dtype
+    if carry is None:
+        carry = jnp.zeros((x.shape[0], dc - 1, x.shape[2]), dtype)
+    xp = jnp.concatenate([carry, x], axis=1)  # (B, S+dc-1, di)
+    w = p["conv_w"].astype(dtype)             # (di, dc)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[:, i] for i in range(dc))
+    out = out + p["conv_b"].astype(dtype)
+    new_carry = xp[:, -(dc - 1):, :] if dc > 1 else carry
+    return jax.nn.silu(out), new_carry
+
+
+def _ssm_params(cfg, p, x):
+    """dt, B, C from x. x: (B,S,di)."""
+    dtype = x.dtype
+    ds, dtr = cfg.mamba_d_state, cfg.dt_rank
+    dbc = jnp.einsum("bsi,ie->bse", x, p["x_proj"].astype(dtype))
+    dt, Bc, Cc = jnp.split(dbc, [dtr, dtr + ds], axis=-1)
+    dt = jnp.einsum("bsr,ri->bsi", dt, p["dt_proj"].astype(dtype))
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    return dt, Bc.astype(jnp.float32), Cc.astype(jnp.float32)
+
+
+def mamba_full(cfg: ModelConfig, params, xz, state: MambaState = None):
+    """Train/prefill path. Returns (y, final MambaState)."""
+    p = params["mamba"]
+    b, s, _ = xz.shape
+    di, ds = cfg.mamba_d_inner, cfg.mamba_d_state
+    x, z = _mamba_inner(cfg, p, xz, None)
+    conv_carry = None if state is None else state.conv
+    x, conv_out = _causal_conv(cfg, p, x, conv_carry)
+    x = constrain(x, "act_bsi")
+    dt, Bc, Cc = _ssm_params(cfg, p, x)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))          # (di, ds)
+    xf = x.astype(jnp.float32)
+
+    chunk = MAMBA_CHUNK
+    n_chunks = s // chunk
+    assert s % chunk == 0, f"seq {s} % chunk {chunk} != 0"
+
+    def to_chunks(t):
+        return t.reshape(b, n_chunks, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    dt_c, B_c, C_c, x_c = map(to_chunks, (dt, Bc, Cc, xf))
+    h0 = (jnp.zeros((b, di, ds), jnp.float32) if state is None
+          else state.ssm.astype(jnp.float32))
+
+    def chunk_body(h, inp):
+        dtk, Bk, Ck, xk = inp             # (B, L, ...)
+        dA = jnp.exp(dtk[..., None] * A)                    # (B,L,di,ds)
+        dBx = (dtk * xk)[..., None] * Bk[:, :, None, :]     # (B,L,di,ds)
+        # inclusive cumulative: h_t = dA_t h_{t-1} + dBx_t
+        logs = jnp.log(jnp.maximum(dA, 1e-20))
+        cum = jnp.exp(jnp.cumsum(logs, axis=1))             # prod dA_1..t
+        scaled = dBx / jnp.maximum(cum, 1e-20)
+        hs = cum * (jnp.cumsum(scaled, axis=1) + h[:, None] / 1.0)
+        y = jnp.einsum("blis,bls->bli", hs, Ck)
+        return hs[:, -1], y
+
+    hT, ys = jax.lax.scan(chunk_body, h0, (dt_c, B_c, C_c, x_c))
+    y = ys.swapaxes(0, 1).reshape(b, s, di)
+    y = y + xf * p["D"].astype(jnp.float32)
+    y = (y.astype(cfg.compute_dtype)) * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(cfg.compute_dtype))
+    new_state = MambaState(conv=conv_out, ssm=hT.astype(jnp.float32))
+    return out, new_state
+
+
+def mamba_decode(cfg: ModelConfig, params, xz, state: MambaState):
+    """One-token step. xz: (B, 1, d_model)."""
+    p = params["mamba"]
+    b = xz.shape[0]
+    x, z = _mamba_inner(cfg, p, xz, None)
+    # conv over carry + current token
+    dc = cfg.mamba_d_conv
+    xp = jnp.concatenate([state.conv.astype(x.dtype), x], axis=1)
+    w = p["conv_w"].astype(x.dtype)
+    xc = sum(xp[:, -dc + i, :] * w[:, i] for i in range(dc))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(x.dtype))[:, None, :]
+    new_conv = xp[:, -(dc - 1):, :]
+    dt, Bc, Cc = _ssm_params(cfg, p, xc)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt0, B0, C0, x0 = dt[:, 0], Bc[:, 0], Cc[:, 0], \
+        xc[:, 0].astype(jnp.float32)
+    dA = jnp.exp(dt0[..., None] * A)                        # (B,di,ds)
+    h = dA * state.ssm + (dt0 * x0)[..., None] * B0[:, None, :]
+    h = constrain(h, "mamba_state")
+    y = jnp.einsum("bis,bs->bi", h, C0) + x0 * p["D"].astype(jnp.float32)
+    y = y.astype(cfg.compute_dtype)[:, None, :] * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, p["out_proj"].astype(cfg.compute_dtype))
+    return out, MambaState(conv=new_conv, ssm=h)
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int) -> MambaState:
+    return MambaState(
+        conv=jnp.zeros((batch, cfg.mamba_d_conv - 1, cfg.mamba_d_inner),
+                       cfg.compute_dtype),
+        ssm=jnp.zeros((batch, cfg.mamba_d_inner, cfg.mamba_d_state),
+                      jnp.float32))
+
+
+# ===========================================================================
+# xLSTM — mLSTM (matrix memory, chunk-parallel)
+# ===========================================================================
+
+class MLSTMState(NamedTuple):
+    C: jax.Array  # (B, H, Dk, Dv)
+    n: jax.Array  # (B, H, Dk)
+
+
+def init_mlstm(cfg: ModelConfig, key):
+    d = cfg.d_model
+    dp = int(cfg.xlstm_proj_factor * d)
+    h = cfg.n_heads
+    dk = dp // h
+    ks = jax.random.split(key, 5)
+    return {
+        "up_proj": dense_init(ks[0], (d, 2 * dp), cfg.param_dtype),
+        "wqk": dense_init(ks[1], (dp, 2 * h * dk), cfg.param_dtype),
+        "wv2": dense_init(ks[2], (dp, h * dk), cfg.param_dtype),
+        "w_gates": dense_init(ks[3], (dp, 2 * h), cfg.param_dtype),
+        "down_proj": dense_init(ks[4], (dp, d), cfg.param_dtype),
+    }
+
+
+def _mlstm_qkv(cfg, p, xin):
+    dtype = cfg.compute_dtype
+    b, s, dp = xin.shape
+    h = cfg.n_heads
+    dk = dp // h
+    qk = jnp.einsum("bse,ef->bsf", xin, p["wqk"].astype(dtype))
+    q, k = jnp.split(qk.reshape(b, s, 2 * h, dk), 2, axis=2)
+    v = jnp.einsum("bse,ef->bsf", xin,
+                   p["wv2"].astype(dtype)).reshape(b, s, h, dk)
+    gates = jnp.einsum("bse,ef->bsf", xin, p["w_gates"].astype(dtype))
+    ig, fg = jnp.split(gates.astype(jnp.float32), 2, axis=-1)  # (B,S,H)
+    i = jnp.exp(jnp.minimum(ig, 10.0))          # stabilized exp input gate
+    f = jax.nn.sigmoid(fg)
+    return q, k, v, i, f, dk
+
+
+def mlstm_full(cfg: ModelConfig, params, x, state: MLSTMState = None):
+    dtype = cfg.compute_dtype
+    b, s, _ = x.shape
+    hN = cfg.n_heads
+    up = jnp.einsum("bsd,de->bse", x, params["up_proj"].astype(dtype))
+    xin, z = jnp.split(up, 2, axis=-1)
+    q, k, v, i, f, dk = _mlstm_qkv(cfg, params, xin)
+    scale = 1.0 / (dk ** 0.5)
+
+    L = min(MLSTM_CHUNK, s)
+    assert s % L == 0
+    n_chunks = s // L
+
+    def to_chunks(t):
+        return t.reshape(b, n_chunks, L, *t.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc, ic, fc = map(to_chunks, (q, k, v, i, f))
+    C0 = (jnp.zeros((b, hN, dk, dk), jnp.float32) if state is None
+          else state.C)
+    n0 = (jnp.zeros((b, hN, dk), jnp.float32) if state is None
+          else state.n)
+
+    def chunk_body(carry, inp):
+        C, n = carry
+        qk_, kk_, vk_, ik_, fk_ = inp
+        logf = jnp.log(jnp.maximum(fk_, 1e-20))          # (B,L,H)
+        F = jnp.cumsum(logf, axis=1)
+        # intra-chunk "attention" with decay exp(F_t - F_s) i_s, causal
+        qf = qk_.astype(jnp.float32)
+        kf = kk_.astype(jnp.float32)
+        scores = jnp.einsum("bthk,bshk->bhts", qf, kf) * scale
+        Fh = F.swapaxes(1, 2)                             # (B,H,L)
+        dmat = Fh[:, :, :, None] - Fh[:, :, None, :]      # (B,H,T,S) F_t-F_s
+        causal = jnp.tril(jnp.ones((L, L), bool))
+        w = jnp.where(causal[None, None], jnp.exp(dmat), 0.0)
+        w = w * ik_.swapaxes(1, 2)[:, :, None, :]
+        intra = jnp.einsum("bhts,bshk->bthk", scores * w,
+                           vk_.astype(jnp.float32))
+        # inter-chunk: carry contribution
+        decay_t = jnp.exp(F).swapaxes(1, 2)               # (B,H,T)
+        inter = jnp.einsum("bthk,bhkv->bthv", qf * scale, C) \
+            * decay_t.swapaxes(1, 2)[..., None]
+        nq = jnp.einsum("bthk,bhk->bth", qf * scale, n) \
+            * decay_t.swapaxes(1, 2)
+        # normalizer: intra part
+        n_intra = jnp.einsum("bhts,bshk->bthk", w, kf)
+        denom_intra = jnp.einsum("bthk,bthk->bth", qf * scale, n_intra)
+        denom = jnp.maximum(jnp.abs(nq + denom_intra), 1.0)[..., None]
+        y = (intra + inter) / denom
+        # update carry
+        tot_decay = jnp.exp(F[:, -1])                     # (B,H)
+        rev = jnp.exp(F[:, -1][:, None, :] - F)           # (B,L,H)
+        kw = kf * (rev * ik_)[..., None]
+        C_new = C * tot_decay[..., None, None] + \
+            jnp.einsum("bshk,bshv->bhkv", kw, vk_.astype(jnp.float32))
+        n_new = n * tot_decay[..., None] + jnp.einsum("bshk->bhk", kw)
+        return (C_new, n_new), y.astype(dtype)
+
+    (CT, nT), ys = jax.lax.scan(chunk_body, (C0, n0), (qc, kc, vc, ic, fc))
+    y = ys.swapaxes(0, 1).reshape(b, s, -1)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["down_proj"].astype(dtype))
+    return out, MLSTMState(C=CT, n=nT)
+
+
+def mlstm_decode(cfg: ModelConfig, params, x, state: MLSTMState):
+    dtype = cfg.compute_dtype
+    b = x.shape[0]
+    up = jnp.einsum("bsd,de->bse", x, params["up_proj"].astype(dtype))
+    xin, z = jnp.split(up, 2, axis=-1)
+    q, k, v, i, f, dk = _mlstm_qkv(cfg, params, xin)
+    scale = 1.0 / (dk ** 0.5)
+    qf = q[:, 0].astype(jnp.float32)           # (B,H,Dk)
+    kf = k[:, 0].astype(jnp.float32)
+    vf = v[:, 0].astype(jnp.float32)
+    i0, f0 = i[:, 0], f[:, 0]                  # (B,H)
+    C = state.C * f0[..., None, None] + \
+        (kf * i0[..., None])[..., :, None] * vf[..., None, :]
+    C = constrain(C, "mlstm_state")
+    n = state.n * f0[..., None] + kf * i0[..., None]
+    num = jnp.einsum("bhk,bhkv->bhv", qf * scale, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qf * scale, n)),
+                      1.0)[..., None]
+    y = (num / den).reshape(b, 1, -1).astype(dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["down_proj"].astype(dtype))
+    return out, MLSTMState(C=C, n=n)
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    dp = int(cfg.xlstm_proj_factor * cfg.d_model)
+    dk = dp // cfg.n_heads
+    return MLSTMState(C=jnp.zeros((batch, cfg.n_heads, dk, dk), jnp.float32),
+                      n=jnp.zeros((batch, cfg.n_heads, dk), jnp.float32))
+
+
+# ===========================================================================
+# xLSTM — sLSTM (scalar memory, sequential)
+# ===========================================================================
+
+class SLSTMState(NamedTuple):
+    c: jax.Array  # (B, Dp)
+    n: jax.Array  # (B, Dp)
+    h: jax.Array  # (B, Dp)
+
+
+def init_slstm(cfg: ModelConfig, key):
+    d = cfg.d_model
+    dp = int(cfg.xlstm_proj_factor * d)
+    ks = jax.random.split(key, 3)
+    return {
+        "up_proj": dense_init(ks[0], (d, 4 * dp), cfg.param_dtype),
+        "r_proj": dense_init(ks[1], (dp, 4 * dp), cfg.param_dtype),
+        "down_proj": dense_init(ks[2], (dp, d), cfg.param_dtype),
+    }
+
+
+def _slstm_step(p, dtype, carry, wx_t):
+    c, n, h = carry
+    pre = wx_t + jnp.einsum("be,ef->bf", h,
+                            p["r_proj"].astype(dtype)).astype(jnp.float32)
+    z, i, f, o = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z)
+    i = jnp.exp(jnp.minimum(i, 10.0))
+    f = jax.nn.sigmoid(f)
+    o = jax.nn.sigmoid(o)
+    c2 = f * c + i * z
+    n2 = f * n + i
+    h2 = o * (c2 / jnp.maximum(n2, 1.0))
+    return (c2, n2, h2), h2
+
+
+def slstm_full(cfg: ModelConfig, params, x, state: SLSTMState = None):
+    dtype = cfg.compute_dtype
+    b, s, d = x.shape
+    dp = int(cfg.xlstm_proj_factor * d)
+    wx = jnp.einsum("bsd,df->bsf", x,
+                    params["up_proj"].astype(dtype)).astype(jnp.float32)
+    if state is None:
+        state = init_slstm_state(cfg, b)
+    carry = (state.c, state.n, state.h)
+    carry, hs = jax.lax.scan(
+        lambda cr, w: _slstm_step(params, dtype, cr, w),
+        carry, wx.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(dtype)
+    out = jnp.einsum("bse,ed->bsd", y, params["down_proj"].astype(dtype))
+    return out, SLSTMState(*carry)
+
+
+def slstm_decode(cfg: ModelConfig, params, x, state: SLSTMState):
+    dtype = cfg.compute_dtype
+    wx = jnp.einsum("bsd,df->bsf", x,
+                    params["up_proj"].astype(dtype)).astype(jnp.float32)
+    carry, h = _slstm_step(params, dtype, (state.c, state.n, state.h),
+                           wx[:, 0])
+    out = jnp.einsum("be,ed->bd", h.astype(dtype),
+                     params["down_proj"].astype(dtype))[:, None]
+    return out, SLSTMState(*carry)
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    dp = int(cfg.xlstm_proj_factor * cfg.d_model)
+    z = jnp.zeros((batch, dp), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z)

@@ -1,0 +1,399 @@
+"""Unified model: init / train_loss / prefill / decode for every family.
+
+The layer stack is a ``lax.scan`` over *periods* (cfg.period repeated
+``n_periods`` times).  Block parameters and decode state are pytrees whose
+leaves carry a leading ``n_periods`` dim.  The traced HLO is O(|period|)
+regardless of depth — essential for the 40-cell multi-pod dry-run on a
+single-core host.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import ssm
+from repro.models import moe as moe_mod
+from repro.models.config import (
+    FFN_DENSE, FFN_MOE, FFN_NONE, MIXER_ATTN, MIXER_MAMBA, MIXER_MLSTM,
+    MIXER_SLSTM, BlockSpec, ModelConfig)
+from repro.models import layers as L
+from repro.distributed.sharding import constrain
+
+
+class DecodeCache(NamedTuple):
+    """Per-model decode state: tuple over period positions of stacked
+    per-period block states (or None for stateless blocks)."""
+    blocks: Any
+    cross: Any          # enc-dec: stacked cross KV per decoder period pos
+    pos: jax.Array      # scalar int32 — next position to write
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply
+# ---------------------------------------------------------------------------
+
+def _init_block(cfg: ModelConfig, spec: BlockSpec, key, cross: bool):
+    ks = jax.random.split(key, 6)
+    p = {"norm1": L.init_rmsnorm(cfg)}
+    if spec.mixer == MIXER_ATTN:
+        p["attn"] = attn.init_attention(cfg, ks[0])
+    elif spec.mixer == MIXER_MAMBA:
+        p.update(ssm.init_mamba(cfg, ks[0]))
+    elif spec.mixer == MIXER_MLSTM:
+        p["mlstm"] = ssm.init_mlstm(cfg, ks[0])
+    elif spec.mixer == MIXER_SLSTM:
+        p["slstm"] = ssm.init_slstm(cfg, ks[0])
+    if cross:
+        p["cross_norm"] = L.init_rmsnorm(cfg)
+        p["cross_attn"] = attn.init_attention(cfg, ks[1], cross=True)
+    if spec.ffn == FFN_DENSE and cfg.d_ff > 0:
+        p["norm2"] = L.init_rmsnorm(cfg)
+        p["mlp"] = L.init_mlp(cfg, ks[2])
+    elif spec.ffn == FFN_MOE:
+        p["norm2"] = L.init_rmsnorm(cfg)
+        p["moe"] = moe_mod.init_moe(cfg, ks[3])
+    return p
+
+
+def _block_state_init(cfg: ModelConfig, spec: BlockSpec, batch: int,
+                      max_len: int):
+    if spec.mixer == MIXER_ATTN:
+        return attn.init_kv_cache(cfg, batch, max_len)
+    if spec.mixer == MIXER_MAMBA:
+        return ssm.init_mamba_state(cfg, batch)
+    if spec.mixer == MIXER_MLSTM:
+        return ssm.init_mlstm_state(cfg, batch)
+    if spec.mixer == MIXER_SLSTM:
+        return ssm.init_slstm_state(cfg, batch)
+    return None
+
+
+def _apply_block_full(cfg, spec, p, x, positions, memory_kv, collect_state):
+    """Whole-sequence block application (train / prefill)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
+    state = None
+    if spec.mixer == MIXER_ATTN:
+        out, kv = attn.attend_full(cfg, p["attn"], h, positions)
+        state = kv
+    elif spec.mixer == MIXER_MAMBA:
+        out, state = ssm.mamba_full(cfg, p, h)
+    elif spec.mixer == MIXER_MLSTM:
+        out, state = ssm.mlstm_full(cfg, p["mlstm"], h)
+    elif spec.mixer == MIXER_SLSTM:
+        out, state = ssm.slstm_full(cfg, p["slstm"], h)
+    else:
+        raise ValueError(spec.mixer)
+    x = x + out
+    if memory_kv is not None and "cross_attn" in p:
+        hc = L.rmsnorm(x, p["cross_norm"], cfg.norm_eps)
+        x = x + attn.attend_cross(cfg, p["cross_attn"], hc, memory_kv)
+    if spec.ffn == FFN_DENSE and cfg.d_ff > 0:
+        h2 = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
+        x = x + L.mlp(cfg, p["mlp"], h2)
+    elif spec.ffn == FFN_MOE:
+        h2 = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
+        out2, aux = moe_mod.moe_ffn(cfg, p["moe"], h2)
+        x = x + out2
+    x = constrain(x, "act_btd")
+    return x, (state if collect_state else None), aux
+
+
+def _apply_block_decode(cfg, spec, p, x, state, pos, memory_kv):
+    h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
+    if spec.mixer == MIXER_ATTN:
+        out, state = attn.attend_decode(cfg, p["attn"], h, state, pos)
+    elif spec.mixer == MIXER_MAMBA:
+        out, state = ssm.mamba_decode(cfg, p, h, state)
+    elif spec.mixer == MIXER_MLSTM:
+        out, state = ssm.mlstm_decode(cfg, p["mlstm"], h, state)
+    elif spec.mixer == MIXER_SLSTM:
+        out, state = ssm.slstm_decode(cfg, p["slstm"], h, state)
+    else:
+        raise ValueError(spec.mixer)
+    x = x + out
+    if memory_kv is not None and "cross_attn" in p:
+        hc = L.rmsnorm(x, p["cross_norm"], cfg.norm_eps)
+        x = x + attn.attend_cross(cfg, p["cross_attn"], hc, memory_kv)
+    if spec.ffn == FFN_DENSE and cfg.d_ff > 0:
+        h2 = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
+        x = x + L.mlp(cfg, p["mlp"], h2)
+    elif spec.ffn == FFN_MOE:
+        h2 = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
+        out2, _ = moe_mod.moe_ffn(cfg, p["moe"], h2)
+        x = x + out2
+    return x, state
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+class Model:
+    """Functional model wrapper; all methods are jit-compatible.
+
+    ``unroll=True`` replaces the period ``lax.scan`` with a Python loop —
+    used by the roofline harness (XLA's cost_analysis counts a while-loop
+    body once regardless of trip count, so per-period costs are measured on
+    unrolled depth-1/2 graphs and extrapolated).  ``remat=True`` wraps each
+    period in ``jax.checkpoint`` for training-memory realism.
+    """
+
+    def __init__(self, cfg: ModelConfig, unroll: bool = False,
+                 remat: bool = False):
+        self.cfg = cfg
+        self.unroll = unroll
+        self.remat = remat
+
+    # -- init --------------------------------------------------------------
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        k_emb, k_blocks, k_enc, k_fin = jax.random.split(key, 4)
+        params = {"embed": L.init_embeddings(cfg, k_emb),
+                  "final_norm": L.init_rmsnorm(cfg)}
+        cross = cfg.is_encdec
+
+        def init_period(k):
+            ks = jax.random.split(k, len(cfg.period))
+            return tuple(
+                _init_block(cfg, spec, ks[i], cross)
+                for i, spec in enumerate(cfg.period))
+
+        pkeys = jax.random.split(k_blocks, cfg.n_periods)
+        stacked = jax.vmap(init_period)(pkeys)
+        params["blocks"] = stacked
+        if cfg.is_encdec:
+            ekeys = jax.random.split(k_enc, cfg.n_encoder_layers)
+            enc_spec = BlockSpec(mixer=MIXER_ATTN, ffn=FFN_DENSE)
+            params["enc_blocks"] = jax.vmap(
+                lambda k: _init_block(cfg, enc_spec, k, cross=False))(ekeys)
+            params["enc_norm"] = L.init_rmsnorm(cfg)
+        if cfg.frontend == "vision":
+            # stub projection for precomputed patch embeddings
+            params["vis_proj"] = L.dense_init(
+                k_fin, (cfg.d_model, cfg.d_model), cfg.param_dtype)
+        return params
+
+    # -- encoder (whisper-style; input = precomputed frame embeddings) ------
+    def encode(self, params, frames):
+        cfg = self.cfg
+        x = frames.astype(cfg.compute_dtype)
+        positions = jnp.arange(x.shape[1])[None, :]
+
+        def body(x, p):
+            spec = BlockSpec(mixer=MIXER_ATTN, ffn=FFN_DENSE)
+            x, _, _ = _apply_block_full(
+                _noncausal(cfg), spec, p, x, positions, None, False)
+            return x, None
+
+        if self.unroll:
+            for i in range(cfg.n_encoder_layers):
+                x, _ = body(x, jax.tree.map(lambda t: t[i],
+                                            params["enc_blocks"]))
+        else:
+            x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+        return L.rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+    def _cross_kv(self, params, enc_out):
+        """Precompute per-decoder-period-position cross K/V from encoder
+        output (stacked over periods)."""
+        cfg = self.cfg
+
+        def one_pos(pp):
+            def per_period(p):
+                k, v = attn._project_kv(cfg, p["cross_attn"], enc_out)
+                return attn.KVCache(k=k, v=v)
+            return jax.vmap(per_period)(pp)
+
+        return tuple(one_pos(params["blocks"][i])
+                     for i in range(len(cfg.period)))
+
+    # -- full pass over a sequence ------------------------------------------
+    def _stack_full(self, params, x, positions, cross_kv, collect_state):
+        cfg = self.cfg
+
+        def body(carry, inp):
+            x, aux = carry
+            pp, cross = inp
+            states = []
+            for i, spec in enumerate(cfg.period):
+                mem = None if cross is None else cross[i]
+                x, st, a = _apply_block_full(
+                    cfg, spec, pp[i], x, positions, mem, collect_state)
+                states.append(st)
+                aux = aux + a
+            return (x, aux), (tuple(states) if collect_state else None)
+
+        aux0 = jnp.zeros((), jnp.float32)
+        if self.remat:
+            body = jax.checkpoint(body)
+        if self.unroll:
+            carry = (x, aux0)
+            all_states = []
+            for i in range(cfg.n_periods):
+                pp = jax.tree.map(lambda t: t[i], params["blocks"])
+                cr = (None if cross_kv is None
+                      else jax.tree.map(lambda t: t[i], tuple(cross_kv)))
+                carry, st = body(carry, (pp, cr))
+                all_states.append(st)
+            (x, aux) = carry
+            states = (jax.tree.map(lambda *ts: jnp.stack(ts), *all_states)
+                      if collect_state else None)
+            return x, aux, states
+        if cross_kv is None:
+            (x, aux), states = jax.lax.scan(
+                lambda c, pp: body(c, (pp, None)), (x, aux0),
+                params["blocks"])
+        else:
+            (x, aux), states = jax.lax.scan(
+                body, (x, aux0), (params["blocks"], tuple(cross_kv)))
+        return x, aux, states
+
+    # -- train loss ----------------------------------------------------------
+    def train_loss(self, params, batch):
+        """batch: dict with 'tokens' (B,S), 'labels' (B,S); optional
+        'frames' (audio) or 'patches' (vision)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = L.embed(cfg, params["embed"], tokens)
+        cross_kv = None
+        if cfg.is_encdec:
+            enc_out = self.encode(params, batch["frames"])
+            cross_kv = self._cross_kv(params, enc_out)
+        if cfg.frontend == "vision":
+            vis = batch["patches"].astype(cfg.compute_dtype)
+            vis = jnp.einsum("bpd,de->bpe", vis,
+                             params["vis_proj"].astype(cfg.compute_dtype))
+            x = jnp.concatenate([vis, x], axis=1)
+        x = constrain(x, "act_btd")
+        positions = jnp.arange(x.shape[1])[None, :]
+        x, aux, _ = self._stack_full(params, x, positions, cross_kv, False)
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        if cfg.frontend == "vision":
+            x = x[:, batch["patches"].shape[1]:]
+        logits = L.lm_logits(cfg, params["embed"], x)
+        logits = constrain(logits, "logits")
+        loss = L.cross_entropy(logits, batch["labels"], cfg.vocab_size)
+        if any(b.ffn == FFN_MOE for b in cfg.period):
+            loss = loss + 0.01 * aux / cfg.n_layers
+        return loss
+
+    # -- prefill -------------------------------------------------------------
+    def prefill(self, params, batch, max_len: Optional[int] = None):
+        """Run the prompt; returns (last-token logits, DecodeCache).
+
+        The KV cache is written into a ``max_len``-sized buffer so decode
+        can continue in-place."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        max_len = max_len or s
+        x = L.embed(cfg, params["embed"], tokens)
+        cross_kv = None
+        if cfg.is_encdec:
+            enc_out = self.encode(params, batch["frames"])
+            cross_kv = self._cross_kv(params, enc_out)
+        if cfg.frontend == "vision":
+            vis = batch["patches"].astype(cfg.compute_dtype)
+            vis = jnp.einsum("bpd,de->bpe", vis,
+                             params["vis_proj"].astype(cfg.compute_dtype))
+            x = jnp.concatenate([vis, x], axis=1)
+        x = constrain(x, "act_btd")
+        positions = jnp.arange(x.shape[1])[None, :]
+        x, _, states = self._stack_full(params, x, positions, cross_kv, True)
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = L.lm_logits(cfg, params["embed"], x[:, -1:])
+
+        # pad attention KV caches out to max_len
+        seq = x.shape[1]
+
+        def pad_state(spec, st):
+            if spec.mixer == MIXER_ATTN and max_len > seq:
+                def padkv(t):
+                    pw = [(0, 0)] * t.ndim
+                    pw[-3] = (0, max_len - seq)
+                    return jnp.pad(t, pw)
+                return attn.KVCache(k=padkv(st.k), v=padkv(st.v))
+            return st
+
+        states = tuple(
+            pad_state(spec, states[i]) if states[i] is not None else None
+            for i, spec in enumerate(cfg.period))
+        cache = DecodeCache(blocks=states, cross=cross_kv,
+                            pos=jnp.array(seq, jnp.int32))
+        return logits, cache
+
+    # -- one-token decode ------------------------------------------------------
+    def decode_step(self, params, cache: DecodeCache, tokens):
+        """tokens: (B, 1) the token sampled at cache.pos-1; returns logits
+        for position cache.pos and the updated cache."""
+        cfg = self.cfg
+        x = L.embed(cfg, params["embed"], tokens)
+        pos = cache.pos
+
+        def body(x, inp):
+            pp, st, cross = inp
+            new_states = []
+            for i, spec in enumerate(cfg.period):
+                mem = None if cross is None else cross[i]
+                x, st_i = _apply_block_decode(
+                    cfg, spec, pp[i], x, st[i], pos, mem)
+                new_states.append(st_i)
+            return x, tuple(new_states)
+
+        if self.unroll:
+            new_list = []
+            for i in range(cfg.n_periods):
+                pp = jax.tree.map(lambda t: t[i], params["blocks"])
+                st = jax.tree.map(lambda t: t[i], cache.blocks)
+                cr = (None if cache.cross is None
+                      else jax.tree.map(lambda t: t[i], cache.cross))
+                x, st_new = body(x, (pp, st, cr))
+                new_list.append(st_new)
+            new_states = jax.tree.map(lambda *ts: jnp.stack(ts), *new_list)
+        elif cache.cross is None:
+            x, new_states = jax.lax.scan(
+                lambda c, i: body(c, (i[0], i[1], None)),
+                x, (params["blocks"], cache.blocks))
+        else:
+            x, new_states = jax.lax.scan(
+                body, x, (params["blocks"], cache.blocks, cache.cross))
+        x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = L.lm_logits(cfg, params["embed"], x)
+        logits = constrain(logits, "logits")
+        new_cache = DecodeCache(blocks=new_states, cross=cache.cross,
+                                pos=pos + 1)
+        return logits, new_cache
+
+    # -- decode state allocation (for dry-run serve_step) ---------------------
+    def init_cache(self, batch: int, max_len: int,
+                   filled: Optional[int] = None) -> DecodeCache:
+        cfg = self.cfg
+
+        def one_pos(spec):
+            st = _block_state_init(cfg, spec, batch, max_len)
+            if st is None:
+                return None
+            return jax.tree.map(
+                lambda t: jnp.broadcast_to(
+                    t[None], (cfg.n_periods,) + t.shape), st)
+
+        states = tuple(one_pos(spec) for spec in cfg.period)
+        cross = None
+        if cfg.is_encdec:
+            kvshape = (cfg.n_periods, batch, cfg.encoder_seq,
+                       cfg.n_kv_heads, cfg.d_head)
+            cross = tuple(
+                attn.KVCache(k=jnp.zeros(kvshape, cfg.compute_dtype),
+                             v=jnp.zeros(kvshape, cfg.compute_dtype))
+                for _ in cfg.period)
+        pos = jnp.array(filled if filled is not None else 0, jnp.int32)
+        return DecodeCache(blocks=states, cross=cross, pos=pos)
+
+
+def _noncausal(cfg: ModelConfig) -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(cfg, causal=False)

@@ -1,0 +1,142 @@
+"""Analytical LLM-serving performance simulator (roofline step-time model).
+
+Plays the role of the paper's H100+vLLM benchmarking rig: given a model
+config, an accelerator profile, a TP degree and a workload (ii, oo, bb),
+it produces throughput samples with realistic saturation behaviour and
+measurement noise.  The step-time terms mirror the three roofline terms of
+EXPERIMENTS.md §Roofline:
+
+  prefill:  compute-bound   2·N_active·ii·bb / (chips·peak·mfu) + attn O(ii²)
+  decode:   bandwidth-bound (weights-read + KV-read)/HBM, compute, ICI
+  request:  t = t_prefill + oo · t_decode;  thpt = bb·oo / t
+
+The weights-read term amortizes over the batch — exactly the mechanism
+behind the paper's saturating thpt(bb) = c − a·e^(−b·bb) observation.
+MoE reads only the experts a batch activates; SSM/hybrid models replace
+KV reads with O(1) state reads, giving much flatter curves.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List
+
+import numpy as np
+
+from repro.models.config import (FFN_MOE, MIXER_ATTN, MIXER_MAMBA,
+                                 MIXER_MLSTM, MIXER_SLSTM, ModelConfig)
+from repro.perfmodel.tpu import HardwareProfile
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingSetup:
+    cfg: ModelConfig
+    hw: HardwareProfile
+    chips: int = 4            # TP degree
+    framework_eff: float = 1.0  # serving-framework efficiency multiplier
+    dtype_bytes: int = 2
+
+
+def _per_layer_counts(cfg: ModelConfig):
+    """(attn_layers, mamba_layers, slstm, mlstm, dense_ffn, moe_ffn)."""
+    reps = cfg.n_periods
+    attn = sum(b.mixer == MIXER_ATTN for b in cfg.period) * reps
+    mamba = sum(b.mixer == MIXER_MAMBA for b in cfg.period) * reps
+    sl = sum(b.mixer == MIXER_SLSTM for b in cfg.period) * reps
+    ml = sum(b.mixer == MIXER_MLSTM for b in cfg.period) * reps
+    dense = sum(b.ffn == "dense" for b in cfg.period) * reps
+    moe = sum(b.ffn == FFN_MOE for b in cfg.period) * reps
+    return attn, mamba, sl, ml, dense, moe
+
+
+def kv_bytes_per_token(cfg: ModelConfig, dtype_bytes: int = 2) -> float:
+    attn, *_ = _per_layer_counts(cfg)
+    return attn * 2 * cfg.n_kv_heads * cfg.d_head * dtype_bytes
+
+
+def state_bytes(cfg: ModelConfig, dtype_bytes: int = 2) -> float:
+    """Recurrent state bytes per sequence (mamba/xlstm)."""
+    _, mamba, sl, ml, _, _ = _per_layer_counts(cfg)
+    di, ds = cfg.mamba_d_inner, cfg.mamba_d_state
+    dp = int(cfg.xlstm_proj_factor * cfg.d_model)
+    dk = dp // max(cfg.n_heads, 1)
+    return (mamba * (di * ds * 4 + (cfg.mamba_d_conv - 1) * di * dtype_bytes)
+            + sl * 3 * dp * 4
+            + ml * (cfg.n_heads * dk * dk + cfg.n_heads * dk) * 4)
+
+
+def weights_read_bytes(cfg: ModelConfig, bb: float,
+                       dtype_bytes: int = 2) -> float:
+    """Bytes of weights actually touched per decode step at batch bb.
+
+    Dense layers: all weights.  MoE layers: min(E, bb·topk expected hits)
+    experts (coupon-collector expectation)."""
+    n_dense_equiv = cfg.param_count(active_only=False)
+    attn, mamba, sl, ml, dense, moe = _per_layer_counts(cfg)
+    if moe == 0:
+        return n_dense_equiv * dtype_bytes
+    e, k = cfg.n_experts, cfg.top_k
+    expert_params = 3 * cfg.d_model * cfg.expert_d_ff
+    # expected distinct experts hit by bb·k draws (uniform approx)
+    draws = bb * k
+    hit = e * (1 - (1 - 1 / e) ** draws)
+    moe_total = moe * e * expert_params
+    moe_read = moe * hit * expert_params
+    return (n_dense_equiv - moe_total + moe_read) * dtype_bytes
+
+
+def decode_step_time(setup: ServingSetup, bb: float, context: float) -> float:
+    cfg, hw, chips = setup.cfg, setup.hw, setup.chips
+    attn, mamba, sl, ml, dense, moe = _per_layer_counts(cfg)
+    n_active = cfg.param_count(active_only=True)
+    # compute: 2 FLOPs/param/token + attention dot products over context
+    flops = 2 * n_active * bb
+    flops += 2 * 2 * attn * cfg.n_heads * cfg.d_head * context * bb
+    t_compute = flops / (chips * hw.peak_flops * hw.mfu_prefill)
+    # memory: weights touched once + KV/state per sequence
+    mem = weights_read_bytes(cfg, bb, setup.dtype_bytes)
+    mem += bb * context * kv_bytes_per_token(cfg, setup.dtype_bytes)
+    mem += bb * state_bytes(cfg, setup.dtype_bytes)
+    t_mem = mem / (chips * hw.hbm_bw * hw.mfu_decode)
+    # ICI: 2 all-reduces (attn+ffn) of (bb, d_model) per layer, ring cost
+    coll_bytes = (2 * cfg.n_layers * bb * cfg.d_model * setup.dtype_bytes
+                  * 2 * (chips - 1) / max(chips, 1))
+    t_ici = coll_bytes / (hw.ici_bw * hw.ici_eff) if chips > 1 else 0.0
+    # moe all-to-all
+    if moe:
+        t_ici += (2 * moe * bb * cfg.d_model * setup.dtype_bytes
+                  / (hw.ici_bw * hw.ici_eff)) if chips > 1 else 0.0
+    return max(t_compute, t_mem, t_ici) / setup.framework_eff
+
+
+def prefill_time(setup: ServingSetup, ii: float, bb: float) -> float:
+    cfg, hw, chips = setup.cfg, setup.hw, setup.chips
+    attn, *_ = _per_layer_counts(cfg)
+    n_active = cfg.param_count(active_only=True)
+    flops = 2 * n_active * ii * bb
+    flops += 2 * 2 * attn * cfg.n_heads * cfg.d_head * ii * ii * bb / 2
+    t_compute = flops / (chips * hw.peak_flops * hw.mfu_prefill)
+    mem = (weights_read_bytes(cfg, 1e9, setup.dtype_bytes)
+           + bb * ii * kv_bytes_per_token(cfg, setup.dtype_bytes))
+    t_mem = mem / (chips * hw.hbm_bw * hw.mfu_decode)
+    return max(t_compute, t_mem) / setup.framework_eff
+
+
+def throughput(setup: ServingSetup, ii: float, oo: float, bb: float) -> float:
+    """Output tokens/sec for a batch of bb requests of (ii -> oo) tokens."""
+    t_pre = prefill_time(setup, ii, bb)
+    ctx = ii + oo / 2.0
+    t_dec = decode_step_time(setup, bb, ctx)
+    total = t_pre + oo * t_dec
+    return bb * oo / total
+
+
+def sample_throughput(setup: ServingSetup, ii, oo, bb, reps: int,
+                      rng: np.random.Generator,
+                      noise_sigma: float = 0.05,
+                      straggler_p: float = 0.02) -> np.ndarray:
+    """reps noisy measurements (lognormal noise + rare straggler dips)."""
+    base = throughput(setup, ii, oo, bb)
+    noise = rng.lognormal(mean=0.0, sigma=noise_sigma, size=reps)
+    stragglers = np.where(rng.random(reps) < straggler_p,
+                          rng.uniform(0.6, 0.9, size=reps), 1.0)
+    return base * noise * stragglers

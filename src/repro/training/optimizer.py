@@ -1,0 +1,98 @@
+"""Hand-rolled AdamW + schedules (optax is not available offline).
+
+Optimizer state mirrors the param pytree; under ZeRO-1 the (m, v) trees are
+additionally sharded over the ``data`` axis (see sharding.tree_shardings
+with ``for_opt_state=True``) so per-device optimizer memory scales 1/DP.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def lr_schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def global_norm(tree):
+    sq = jax.tree.map(
+        lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree)
+    return jnp.sqrt(jax.tree.reduce(lambda a, b: a + b, sq))
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state: AdamWState,
+                 constrain_update=None):
+    """Returns (new_params, new_state, metrics).
+
+    ``constrain_update``: optional fn pinning the update tree to the
+    ZeRO (data-sharded) layout so the cross-data all-gather happens ONCE
+    on the fused delta instead of separately on m-hat and v-hat (perf
+    iteration #4 — halves the ZeRO update gather bytes)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(which):
+        def f(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            m2 = cfg.b1 * m + (1 - cfg.b1) * g
+            v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+            if which == "m":
+                return m2
+            if which == "v":
+                return v2
+            mhat = m2 / b1c
+            vhat = v2 / b2c
+            return mhat / (jnp.sqrt(vhat) + cfg.eps) \
+                + cfg.weight_decay * p.astype(jnp.float32)
+        return f
+
+    # three passes over the tree; XLA CSEs the shared m2/v2 computation
+    delta = jax.tree.map(upd("d"), params, grads, state.m, state.v)
+    if constrain_update is not None:
+        delta = constrain_update(delta)
+    new_params = jax.tree.map(
+        lambda p, d: (p.astype(jnp.float32) - lr * d).astype(p.dtype),
+        params, delta)
+    new_m = jax.tree.map(upd("m"), params, grads, state.m, state.v)
+    new_v = jax.tree.map(upd("v"), params, grads, state.m, state.v)
+    return new_params, AdamWState(step=step, m=new_m, v=new_v), {
+        "grad_norm": gnorm, "lr": lr}

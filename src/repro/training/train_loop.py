@@ -1,0 +1,124 @@
+"""Trainer: jitted step + checkpoint/restart + straggler accounting.
+
+Runs on any mesh (the single-CPU host mesh for tests/demos; the production
+mesh in the dry-run).  Fault tolerance drill: kill the process at any step,
+rerun the same command — the trainer resumes from the latest atomic
+checkpoint and the deterministic pipeline replays the exact batch stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.shapes import ShapeSpec
+from repro.data.pipeline import SyntheticPipeline
+from repro.distributed.sharding import ShardingPolicy, use_policy
+from repro.launch.steps import build_train_step
+from repro.models.transformer import Model
+from repro.training import checkpoint as ckpt
+from repro.training.optimizer import AdamWConfig, adamw_init
+from repro.training.straggler import StragglerMonitor
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    total_steps: int = 100
+    ckpt_every: int = 25
+    ckpt_dir: str = "checkpoints"
+    log_every: int = 10
+    opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+
+
+class Trainer:
+    def __init__(self, model: Model, shape: ShapeSpec,
+                 policy: Optional[ShardingPolicy], tcfg: TrainConfig,
+                 pipeline: Optional[SyntheticPipeline] = None):
+        self.model = model
+        self.shape = shape
+        self.policy = policy
+        self.tcfg = tcfg
+        self.pipeline = pipeline or SyntheticPipeline(model.cfg, shape)
+        self.monitor = StragglerMonitor()
+        self.history: list = []
+
+        if policy is not None:
+            step, in_sh, out_sh, _ = build_train_step(
+                model, policy, shape, tcfg.opt)
+            self._p_shard, self._o_shard = in_sh[0], in_sh[1]
+            self._step = jax.jit(step, in_shardings=in_sh,
+                                 out_shardings=out_sh,
+                                 donate_argnums=(0, 1))
+        else:
+            from repro.training.optimizer import adamw_update
+
+            def step(params, opt_state, batch):
+                loss, grads = jax.value_and_grad(model.train_loss)(
+                    params, batch)
+                params, opt_state, metrics = adamw_update(
+                    tcfg.opt, params, grads, opt_state)
+                return params, opt_state, loss, metrics
+
+            self._p_shard = self._o_shard = None
+            self._step = jax.jit(step, donate_argnums=(0, 1))
+
+    # -- state ----------------------------------------------------------------
+    def init_state(self, seed: int = 0):
+        params = self.model.init(jax.random.key(seed))
+        opt = adamw_init(params)
+        return params, opt
+
+    def try_restore(self, params, opt):
+        last = ckpt.latest_step(self.tcfg.ckpt_dir)
+        if last is None:
+            return params, opt, 0
+        params = ckpt.restore_checkpoint(self.tcfg.ckpt_dir, params,
+                                         shardings=self._p_shard)
+        opt = ckpt.restore_checkpoint(
+            pathlib.Path(self.tcfg.ckpt_dir) / "opt", opt,
+            shardings=self._o_shard)
+        return params, opt, last
+
+    # -- loop -------------------------------------------------------------------
+    def run(self, seed: int = 0,
+            on_step: Optional[Callable[[int, float], None]] = None):
+        params, opt = self.init_state(seed)
+        params, opt, start = self.try_restore(params, opt)
+        ctx = use_policy(self.policy) if self.policy else _nullctx()
+        with ctx:
+            for step_i in range(start, self.tcfg.total_steps):
+                batch = {k: jax.numpy.asarray(v)
+                         for k, v in self.pipeline.batch_at(step_i).items()}
+                t0 = time.perf_counter()
+                params, opt, loss, metrics = self._step(params, opt, batch)
+                loss = float(loss)
+                dt = time.perf_counter() - t0
+                self.monitor.record(0, dt)
+                self.history.append(
+                    dict(step=step_i, loss=loss, sec=dt,
+                         grad_norm=float(metrics["grad_norm"])))
+                if on_step:
+                    on_step(step_i, loss)
+                if (step_i + 1) % self.tcfg.log_every == 0:
+                    print(f"[train] step={step_i + 1} loss={loss:.4f} "
+                          f"({dt:.2f}s/step)")
+                if (step_i + 1) % self.tcfg.ckpt_every == 0 or \
+                        step_i + 1 == self.tcfg.total_steps:
+                    ckpt.save_checkpoint(self.tcfg.ckpt_dir, step_i + 1,
+                                         params)
+                    ckpt.save_checkpoint(
+                        pathlib.Path(self.tcfg.ckpt_dir) / "opt",
+                        step_i + 1, opt)
+        return params, opt
+
+
+class _nullctx:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False

@@ -1,0 +1,213 @@
+"""ALA core: curve fitting, GBT, database, SA, error predictor,
+uncertainty — unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ala import ALA, ALAConfig
+from repro.core.annealing import SAConfig, anneal, evaluate_subset, median_ape
+from repro.core.database import build_exponential_database
+from repro.core.error_predictor import encode_subset, train_error_predictor
+from repro.core.expmodel import exp_model, initial_params
+from repro.core.fit import fit_exponential_groups, fit_exponential_numpy
+from repro.core.gbt import GBTRegressor, LinearRegression, MultiOutputGBT
+from repro.core.uncertainty import confidence, workload_distance
+
+
+# ------------------------------------------------------------------- fit --
+@settings(max_examples=15, deadline=None)
+@given(a=st.floats(10, 2000), b=st.floats(0.005, 0.5),
+       c=st.floats(100, 20000), seed=st.integers(0, 100))
+def test_lm_recovers_exponential_params(a, b, c, seed):
+    """Noise-free exponential data must be recovered to ~1%."""
+    if c <= a:  # keep thpt positive at bb=0-ish
+        c = a + c
+    bb = np.array([1, 2, 4, 8, 16, 32, 64, 128, 256], float)
+    y = exp_model(bb, a, b, c)
+    theta0 = initial_params(bb, y)
+    theta = fit_exponential_groups([(bb, y, theta0)])[0]
+    pred = exp_model(bb, *theta)
+    err = np.max(np.abs(pred - y) / np.maximum(np.abs(y), 1e-9))
+    assert err < 0.01, (theta, (a, b, c), err)
+
+
+def test_lm_jax_matches_numpy_oracle():
+    rng = np.random.default_rng(0)
+    bb = np.array([1, 2, 4, 8, 16, 32, 64], float)
+    y = exp_model(bb, 800.0, 0.08, 1000.0) * rng.lognormal(0, 0.02, len(bb))
+    theta0 = initial_params(bb, y)
+    tj = fit_exponential_groups([(bb, y, theta0)])[0]
+    tn = fit_exponential_numpy(bb, y, theta0)
+    pj = exp_model(bb, *tj)
+    pn = exp_model(bb, *tn)
+    np.testing.assert_allclose(pj, pn, rtol=5e-2)
+
+
+def test_fit_batched_groups_independent():
+    """vmapped fit must equal per-group fits."""
+    rng = np.random.default_rng(1)
+    groups = []
+    for i in range(5):
+        bb = np.array([1, 2, 4, 8, 16, 32, 64, 128], float)
+        a, b, c = 100 * (i + 1), 0.02 * (i + 1), 500 * (i + 2)
+        y = exp_model(bb, a, b, c)
+        groups.append((bb, y, initial_params(bb, y)))
+    batch = fit_exponential_groups(groups)
+    for g, th in zip(groups, batch):
+        single = fit_exponential_groups([g])[0]
+        np.testing.assert_allclose(exp_model(g[0], *th),
+                                   exp_model(g[0], *single), rtol=1e-3)
+
+
+# ------------------------------------------------------------------- gbt --
+def test_gbt_fits_simple_function():
+    rng = np.random.default_rng(0)
+    X = rng.uniform(0, 10, size=(2000, 3))
+    y = 3 * X[:, 0] + np.sin(X[:, 1]) * 5 + X[:, 2] ** 2
+    m = GBTRegressor(n_estimators=150, learning_rate=0.1, max_depth=4)
+    m.fit(X[:1500], y[:1500])
+    pred = m.predict(X[1500:])
+    rmse = np.sqrt(np.mean((pred - y[1500:]) ** 2))
+    assert rmse < 0.15 * y.std(), rmse
+
+
+def test_gbt_deterministic_given_seed():
+    rng = np.random.default_rng(2)
+    X = rng.normal(size=(500, 4))
+    y = X @ np.array([1.0, -2.0, 0.5, 3.0])
+    p1 = GBTRegressor(seed=7, subsample=0.8).fit(X, y).predict(X[:50])
+    p2 = GBTRegressor(seed=7, subsample=0.8).fit(X, y).predict(X[:50])
+    np.testing.assert_array_equal(p1, p2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 50))
+def test_gbt_training_reduces_error_property(seed):
+    rng = np.random.default_rng(seed)
+    X = rng.uniform(-2, 2, size=(400, 2))
+    y = X[:, 0] * X[:, 1] + 0.1 * rng.normal(size=400)
+    base_err = np.mean((y - y.mean()) ** 2)
+    m = GBTRegressor(n_estimators=60, max_depth=3).fit(X, y)
+    fit_err = np.mean((m.predict(X) - y) ** 2)
+    assert fit_err < base_err
+
+
+def test_multioutput_gbt_shapes():
+    rng = np.random.default_rng(3)
+    X = rng.normal(size=(200, 5))
+    Y = rng.normal(size=(200, 3))
+    m = MultiOutputGBT(3, n_estimators=20).fit(X, Y)
+    assert m.predict(X[:17]).shape == (17, 3)
+
+
+def test_linear_regression_exact_on_linear_data():
+    rng = np.random.default_rng(4)
+    X = rng.normal(size=(100, 3))
+    y = X @ np.array([2.0, -1.0, 0.5]) + 4.0
+    m = LinearRegression().fit(X, y)
+    np.testing.assert_allclose(m.predict(X), y, atol=1e-8)
+
+
+# -------------------------------------------------------------- database --
+def _toy_workload(seed=0, noise=0.0):
+    rng = np.random.default_rng(seed)
+    iis, oos = [128, 512, 2048], [128, 1024]
+    bbs = np.array([1, 2, 4, 8, 16, 32, 64, 128], float)
+    rows = []
+    for ii in iis:
+        for oo in oos:
+            c = 2e4 / np.log2(ii + oo)
+            a, b = 0.9 * c, 0.03
+            y = exp_model(bbs, a, b, c)
+            if noise:
+                y = y * rng.lognormal(0, noise, len(bbs))
+            for bb, t in zip(bbs, y):
+                rows.append((ii, oo, bb, t))
+    arr = np.asarray(rows, float)
+    return arr[:, 0], arr[:, 1], arr[:, 2], arr[:, 3]
+
+
+def test_database_covers_all_pairs():
+    ii, oo, bb, thpt = _toy_workload()
+    db = build_exponential_database(ii, oo, bb, thpt)
+    assert len(db) == 6
+    assert db.lookup(128, 1024) is not None
+    assert db.lookup(999, 999) is None
+    # DB predictions reproduce the generating curve
+    th = db.lookup(512, 128)
+    pred = exp_model(np.array([4.0, 64.0]), *th)
+    truth = [exp_model(v, 0.9 * 2e4 / np.log2(640), 0.03,
+                       2e4 / np.log2(640)) for v in (4.0, 64.0)]
+    np.testing.assert_allclose(pred, truth, rtol=0.02)
+
+
+def test_ala_db_hit_beats_ml_miss():
+    """On observed pairs ALA uses exact fits; unseen pairs go through ML."""
+    ii, oo, bb, thpt = _toy_workload(noise=0.01)
+    ala = ALA().fit(ii, oo, bb, thpt)
+    seen = ala.predict(np.array([512.0]), np.array([128.0]),
+                       np.array([32.0]))[0]
+    truth = exp_model(32.0, 0.9 * 2e4 / np.log2(640), 0.03,
+                      2e4 / np.log2(640))
+    assert abs(seen - truth) / truth < 0.05
+
+
+# ------------------------------------------------------ annealing / Alg 6-8 --
+def _split_toy(seed=0):
+    ii, oo, bb, thpt = _toy_workload(seed=seed, noise=0.02)
+    rng = np.random.default_rng(seed)
+    m = rng.random(len(ii)) < 0.5
+    return (ii[m], oo[m], bb[m], thpt[m]), \
+        (ii[~m], oo[~m], bb[~m], thpt[~m])
+
+
+def test_anneal_logs_and_improves():
+    train, test = _split_toy()
+    cfg = SAConfig(n_iters=20, seed=0,
+                   gbt_kw=dict(n_estimators=20, learning_rate=0.2,
+                               max_depth=3))
+    log = anneal(train, test, cfg)
+    assert len(log.errors) == 22   # init + full-coverage anchor + 20 iters
+    assert log.best_error <= log.errors[0] + 1e-9
+    assert all(np.isfinite(e) for e in log.errors)
+
+
+def test_error_predictor_learns_subset_error_map():
+    train, test = _split_toy()
+    cfg = SAConfig(n_iters=40, seed=1,
+                   gbt_kw=dict(n_estimators=20, learning_rate=0.2,
+                               max_depth=3))
+    log = anneal(train, test, cfg)
+    model = train_error_predictor(log, n_estimators=80)
+    X = np.stack([encode_subset(s, log.universes) for s in log.subsets])
+    pred = model.predict(X)
+    resid = np.abs(pred - np.asarray(log.errors))
+    # in-sample fit should be much tighter than predicting the mean
+    assert np.median(resid) < np.std(log.errors) + 1e-9
+
+
+def test_confidence_decreases_with_distribution_shift():
+    train, test = _split_toy()
+    cfg = SAConfig(n_iters=15, seed=2,
+                   gbt_kw=dict(n_estimators=15, learning_rate=0.2,
+                               max_depth=3))
+    log = anneal(train, test, cfg)
+    # similar workload: the held-out half
+    d_same, c_same = confidence(train, log, test)
+    # shifted workload: scaled thpt (different hardware) + shifted sizes
+    ii, oo, bb, thpt = test
+    shifted = (ii * 7, oo * 5, bb, thpt * 0.1)
+    d_shift, c_shift = confidence(train, log, shifted)
+    assert c_same > c_shift, (c_same, c_shift)
+    assert 0.0 <= c_shift <= c_same <= 1.0
+
+
+def test_workload_distance_zero_for_identical():
+    ii, oo, bb, thpt = _toy_workload()
+    rows = {"ii": ii, "oo": oo, "bb": bb, "thpt": thpt}
+    assert workload_distance(rows, dict(rows)) < 1e-12
+
+
+def test_median_ape_basic():
+    assert median_ape(np.array([100.0, 200.0]),
+                      np.array([110.0, 180.0])) == 10.0

@@ -1,0 +1,141 @@
+"""Checkpointing, gradient compression, straggler logic, data pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke_config
+from repro.configs.shapes import ShapeSpec
+from repro.data.pipeline import PipelineConfig, SyntheticPipeline
+from repro.models.transformer import Model
+from repro.training import checkpoint as ckpt
+from repro.training.compression import (compress_with_feedback, decompress,
+                                        init_ef_state, quantize_int8,
+                                        dequantize_int8)
+from repro.training.straggler import StragglerConfig, StragglerMonitor
+
+
+# ---------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((2,), jnp.bfloat16),
+                  "d": (jnp.zeros((5,)), jnp.full((1,), 7))}}
+    ckpt.save_checkpoint(tmp_path, 3, tree)
+    restored = ckpt.restore_checkpoint(tmp_path, tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+def test_checkpoint_atomic_and_gc(tmp_path):
+    tree = {"w": jnp.ones((4,))}
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save_checkpoint(tmp_path, s, tree, keep=2)
+    steps = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert steps == ["step_00000004", "step_00000005"]
+    assert ckpt.latest_step(tmp_path) == 5
+    assert not list(tmp_path.glob(".tmp*")), "staging dir left behind"
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    ckpt.save_checkpoint(tmp_path, 1, {"w": jnp.ones((4,))})
+    with pytest.raises(AssertionError):
+        ckpt.restore_checkpoint(tmp_path, {"w": jnp.ones((5,))})
+
+
+def test_elastic_restore_across_mesh_shapes(tmp_path):
+    """Save unsharded, restore with explicit shardings on the host mesh —
+    the mesh-reshape path used by elastic restarts."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",))
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    ckpt.save_checkpoint(tmp_path, 1, tree)
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    restored = ckpt.restore_checkpoint(tmp_path, tree, shardings=sh)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(tree["w"]))
+    assert restored["w"].sharding == sh["w"]
+
+
+# ---------------------------------------------------------------- compression
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), scale=st.floats(1e-3, 1e3))
+def test_int8_quantization_error_bound(seed, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(257) * scale, jnp.float32)
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s)) - np.asarray(x))
+    assert err.max() <= float(s) * 0.5 + 1e-7
+
+
+def test_error_feedback_reduces_bias():
+    """With EF, the *cumulative* compressed gradient tracks the true sum."""
+    rng = np.random.default_rng(0)
+    grads = [{"w": jnp.asarray(rng.standard_normal(64) * 0.01
+                               + 0.003, jnp.float32)} for _ in range(50)]
+    ef = init_ef_state(grads[0])
+    acc_comp = np.zeros(64)
+    acc_true = np.zeros(64)
+    for g in grads:
+        q, ef = compress_with_feedback(g, ef)
+        acc_comp += np.asarray(decompress(q)["w"])
+        acc_true += np.asarray(g["w"])
+    # residual is bounded by one quantization step, not O(n_steps)
+    resid = np.abs(acc_comp - acc_true).max()
+    single_step = np.abs(np.asarray(grads[0]["w"])).max() / 127
+    assert resid <= 2 * single_step + 1e-6
+
+
+# ------------------------------------------------------------------ straggler
+def test_straggler_detection():
+    mon = StragglerMonitor(StragglerConfig(window=16, threshold=1.5))
+    for step in range(10):
+        for host in range(8):
+            mon.record(host, 1.0 if host != 3 else 2.5)
+    assert mon.stragglers() == [3]
+
+
+def test_bounded_staleness():
+    mon = StragglerMonitor(StragglerConfig(max_stale=2))
+    assert mon.should_proceed_without(7)
+    assert mon.should_proceed_without(7)
+    assert not mon.should_proceed_without(7)   # staleness bound hit
+    mon.mark_arrived(7)
+    assert mon.should_proceed_without(7)
+
+
+# ------------------------------------------------------------------- pipeline
+def test_pipeline_deterministic_and_resumable():
+    cfg = get_smoke_config("llama3.2-3b")
+    shape = ShapeSpec("t", seq_len=32, global_batch=2, kind="train")
+    p1 = SyntheticPipeline(cfg, shape, PipelineConfig(seed=5))
+    p2 = SyntheticPipeline(cfg, shape, PipelineConfig(seed=5))
+    for step in (0, 7, 123):
+        b1, b2 = p1.batch_at(step), p2.batch_at(step)
+        np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+        np.testing.assert_array_equal(b1["labels"], b2["labels"])
+    # different steps differ
+    assert not np.array_equal(p1.batch_at(0)["tokens"],
+                              p1.batch_at(1)["tokens"])
+
+
+def test_pipeline_labels_are_shifted_tokens():
+    cfg = get_smoke_config("llama3.2-3b")
+    shape = ShapeSpec("t", seq_len=16, global_batch=2, kind="train")
+    b = SyntheticPipeline(cfg, shape).batch_at(0)
+    assert b["tokens"].shape == (2, 16)
+    assert (b["labels"] < cfg.vocab_size).all()
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_pipeline_vision_and_audio_fronts():
+    vcfg = get_smoke_config("internvl2-1b")
+    shape = ShapeSpec("t", seq_len=32, global_batch=2, kind="train")
+    vb = SyntheticPipeline(vcfg, shape).batch_at(0)
+    assert vb["patches"].shape == (2, vcfg.n_patches, vcfg.d_model)
+    assert vb["tokens"].shape[1] == 32 - vcfg.n_patches
+
+    acfg = get_smoke_config("whisper-medium")
+    ab = SyntheticPipeline(acfg, shape).batch_at(0)
+    assert ab["frames"].shape == (2, acfg.encoder_seq, acfg.d_model)

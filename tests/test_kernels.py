@@ -1,0 +1,170 @@
+"""Per-kernel validation: interpret-mode Pallas vs pure-jnp oracle across
+shape/dtype sweeps, plus hypothesis property tests on kernel invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.rmsnorm import ops as rms_ops
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.decode_attention import ops as da_ops
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.gbt_hist import ops as gh_ops
+from repro.kernels.gbt_hist.ref import gbt_hist_ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------- rmsnorm --
+@pytest.mark.parametrize("shape", [(8, 64), (3, 5, 128), (1, 256), (17, 96)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_kernel_matches_ref(shape, dtype):
+    key = jax.random.key(0)
+    x = jax.random.normal(key, shape, dtype)
+    scale = jax.random.normal(jax.random.key(1), shape[-1:], jnp.float32)
+    got = rms_ops.rmsnorm(x, scale, force="interpret", block_rows=8)
+    want = rmsnorm_ref(x, scale)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **_tol(dtype))
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.integers(1, 33), d=st.sampled_from([32, 64, 128]))
+def test_rmsnorm_property_unit_norm(rows, d):
+    """RMSNorm output with unit scale has RMS ~= 1 per row."""
+    x = jax.random.normal(jax.random.key(rows), (rows, d), jnp.float32) * 5.0
+    out = rms_ops.rmsnorm(x, jnp.ones((d,)), force="interpret", block_rows=8)
+    rms = np.sqrt(np.mean(np.asarray(out) ** 2, axis=-1))
+    np.testing.assert_allclose(rms, np.ones(rows), rtol=1e-3)
+
+
+# ---------------------------------------------------------- flash attention --
+@pytest.mark.parametrize("b,h,kv,s,dh", [
+    (1, 4, 4, 128, 64),     # MHA
+    (2, 8, 2, 256, 64),     # GQA 4x
+    (1, 4, 1, 128, 128),    # MQA
+    (2, 6, 2, 64, 32),      # heads not multiple of 4
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(b, h, kv, s, dh, causal, dtype):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, s, h, dh), dtype)
+    k = jax.random.normal(ks[1], (b, s, kv, dh), dtype)
+    v = jax.random.normal(ks[2], (b, s, kv, dh), dtype)
+    got = fa_ops.flash_attention(q, k, v, causal=causal, force="interpret",
+                                 block_q=64, block_k=64)
+    want = fa_ops.flash_attention(q, k, v, causal=causal, force="ref")
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **_tol(dtype))
+
+
+def test_flash_attention_block_shape_sweep():
+    b, s, h, kv, dh = 1, 256, 4, 2, 64
+    ks = jax.random.split(jax.random.key(7), 3)
+    q = jax.random.normal(ks[0], (b, s, h, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kv, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kv, dh), jnp.float32)
+    want = fa_ops.flash_attention(q, k, v, force="ref")
+    for bq, bk in [(32, 64), (64, 32), (128, 128), (256, 64)]:
+        got = fa_ops.flash_attention(q, k, v, force="interpret",
+                                     block_q=bq, block_k=bk)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5,
+                                   err_msg=f"block {bq}x{bk}")
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_flash_attention_property_convex_combination(seed):
+    """Attention output rows lie in the convex hull of V rows => bounded by
+    per-batch max |v|."""
+    ks = jax.random.split(jax.random.key(seed), 3)
+    q = jax.random.normal(ks[0], (1, 64, 4, 32), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 64, 2, 32), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 64, 2, 32), jnp.float32)
+    out = fa_ops.flash_attention(q, k, v, force="interpret",
+                                 block_q=32, block_k=32)
+    assert np.all(np.abs(np.asarray(out)) <= np.abs(np.asarray(v)).max()
+                  + 1e-4)
+
+
+# ---------------------------------------------------------- decode attention --
+@pytest.mark.parametrize("b,h,kv,t,dh", [
+    (2, 8, 2, 128, 64),
+    (1, 4, 4, 512, 128),
+    (4, 16, 8, 256, 64),
+])
+@pytest.mark.parametrize("pos_frac", [0.1, 0.5, 1.0])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_matches_ref(b, h, kv, t, dh, pos_frac, dtype):
+    ks = jax.random.split(jax.random.key(3), 3)
+    q = jax.random.normal(ks[0], (b, h, dh), dtype)
+    k = jax.random.normal(ks[1], (b, t, kv, dh), dtype)
+    v = jax.random.normal(ks[2], (b, t, kv, dh), dtype)
+    pos = jnp.array(int((t - 1) * pos_frac), jnp.int32)
+    got = da_ops.decode_attention(q, k, v, pos, force="interpret",
+                                  block_t=64)
+    want = da_ops.decode_attention(q, k, v, pos, force="ref")
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        **_tol(dtype))
+
+
+def test_decode_attention_ignores_stale_cache():
+    """Entries beyond pos must not affect the output."""
+    ks = jax.random.split(jax.random.key(5), 3)
+    b, h, kv, t, dh = 1, 4, 2, 128, 32
+    q = jax.random.normal(ks[0], (b, h, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (b, t, kv, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (b, t, kv, dh), jnp.float32)
+    pos = jnp.array(63, jnp.int32)
+    out1 = da_ops.decode_attention(q, k, v, pos, force="interpret",
+                                   block_t=32)
+    k2 = k.at[:, 64:].set(99.0)
+    v2 = v.at[:, 64:].set(-99.0)
+    out2 = da_ops.decode_attention(q, k2, v2, pos, force="interpret",
+                                   block_t=32)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6)
+
+
+# ------------------------------------------------------------------ gbt hist --
+@pytest.mark.parametrize("n,f,n_bins", [(100, 3, 16), (512, 8, 64),
+                                        (1000, 11, 32), (7, 1, 8)])
+def test_gbt_hist_matches_ref(n, f, n_bins):
+    rng = np.random.default_rng(0)
+    bins = jnp.asarray(rng.integers(0, n_bins, (n, f)), jnp.int32)
+    grad = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    hess = jnp.asarray(rng.random(n), jnp.float32)
+    got = gh_ops.build_histograms(bins, grad, hess, n_bins=n_bins,
+                                  force="interpret", block_n=64, block_f=4)
+    want = gbt_hist_ref(bins, grad, hess, n_bins)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(1, 300),
+       n_bins=st.sampled_from([8, 16, 32]))
+def test_gbt_hist_property_mass_conservation(seed, n, n_bins):
+    """Sum over bins equals the total gradient/hessian mass per feature."""
+    rng = np.random.default_rng(seed)
+    f = 3
+    bins = jnp.asarray(rng.integers(0, n_bins, (n, f)), jnp.int32)
+    grad = jnp.asarray(rng.standard_normal(n), jnp.float32)
+    hess = jnp.asarray(rng.random(n), jnp.float32)
+    hist = gh_ops.build_histograms(bins, grad, hess, n_bins=n_bins,
+                                   force="interpret", block_n=64, block_f=4)
+    total = np.asarray(hist).sum(axis=1)   # (f, 2)
+    np.testing.assert_allclose(total[:, 0], float(grad.sum()) * np.ones(f),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(total[:, 1], float(hess.sum()) * np.ones(f),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,125 @@
+"""Perf simulator + dataset + registry behaviour tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.dataset import Dataset
+from repro.core.registry import ModelRegistry
+from repro.perfmodel.simulator import (ServingSetup, decode_step_time,
+                                       prefill_time, sample_throughput,
+                                       throughput, weights_read_bytes)
+from repro.perfmodel.tpu import LEGACY_GPU, TPU_V5E
+
+
+@pytest.fixture(scope="module")
+def llama_setup():
+    return ServingSetup(cfg=get_config("llama3.1-8b"), hw=TPU_V5E, chips=4)
+
+
+def test_throughput_saturates_with_batch(llama_setup):
+    """thpt(bb) must be increasing and concave-ish toward an asymptote —
+    the paper's core empirical observation (Fig 2)."""
+    bbs = [1, 2, 4, 8, 16, 32, 64, 128, 256, 512]
+    th = [throughput(llama_setup, 1024, 512, b) for b in bbs]
+    assert all(b > a for a, b in zip(th, th[1:])), th
+    # marginal gains shrink: last doubling gains less than first
+    first_gain = th[1] / th[0]
+    last_gain = th[-1] / th[-2]
+    assert last_gain < first_gain
+    # saturation: gain from final doubling under 35%
+    assert last_gain < 1.35
+
+
+def test_throughput_decreases_with_context(llama_setup):
+    assert throughput(llama_setup, 512, 256, 32) > \
+        throughput(llama_setup, 8192, 256, 32)
+
+
+def test_moe_reads_fewer_weights_at_small_batch():
+    cfg = get_config("phi3.5-moe-42b-a6.6b")
+    w1 = weights_read_bytes(cfg, bb=1)
+    w256 = weights_read_bytes(cfg, bb=256)
+    wtot = cfg.param_count() * 2
+    assert w1 < w256 <= wtot * 1.001
+    # at bb=1 only top_k experts of 16 are hit per moe layer
+    assert w1 < 0.5 * wtot
+
+
+def test_ssm_decode_flat_in_context():
+    cfg = get_config("xlstm-125m")
+    s = ServingSetup(cfg=cfg, hw=TPU_V5E, chips=4)
+    t1 = decode_step_time(s, bb=8, context=1024)
+    t2 = decode_step_time(s, bb=8, context=524_288)
+    assert t2 < t1 * 1.05, "attention-free decode must not scale w/ context"
+
+
+def test_hardware_profiles_differ():
+    cfg = get_config("qwen3-0.6b")
+    a = throughput(ServingSetup(cfg=cfg, hw=TPU_V5E, chips=4), 512, 512, 32)
+    b = throughput(ServingSetup(cfg=cfg, hw=LEGACY_GPU, chips=4),
+                   512, 512, 32)
+    assert abs(a - b) / a > 0.1
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 100))
+def test_sampling_noise_is_unbiased_multiplicative(seed, llama_setup):
+    rng = np.random.default_rng(seed)
+    base = throughput(llama_setup, 512, 256, 16)
+    samples = sample_throughput(llama_setup, 512, 256, 16, reps=200,
+                                rng=rng, straggler_p=0.0)
+    assert abs(np.median(samples) / base - 1) < 0.05
+    assert samples.std() / base < 0.15
+
+
+def test_prefill_time_scales_superlinearly_in_ii(llama_setup):
+    t1 = prefill_time(llama_setup, 1024, 8)
+    t2 = prefill_time(llama_setup, 16384, 8)
+    assert t2 > 12 * t1   # quadratic attention term kicks in
+
+
+# ------------------------------------------------------------------ dataset
+def test_dataset_roundtrip(tmp_path):
+    ds = Dataset({"model": np.array(["a", "b"]), "ii": np.array([1, 2]),
+                  "oo": np.array([3, 4]), "bb": np.array([5, 6]),
+                  "thpt": np.array([1.0, 2.0])})
+    ds.save(tmp_path / "d")
+    ds2 = Dataset.load(tmp_path / "d")
+    assert len(ds2) == 2
+    np.testing.assert_array_equal(ds2["ii"], ds["ii"])
+    sub = ds2.filter(model="a")
+    assert len(sub) == 1 and sub["thpt"][0] == 1.0
+
+
+def test_dataset_unique_combos():
+    ds = Dataset({"model": np.array(["a", "a", "b"]),
+                  "acc": np.array(["x", "x", "y"]),
+                  "ii": np.arange(3), "oo": np.arange(3),
+                  "bb": np.arange(3), "thpt": np.ones(3)})
+    combos = ds.unique_combos(["model", "acc"])
+    assert sorted(combos) == [("a", "x"), ("b", "y")]
+
+
+# ------------------------------------------------------------------ registry
+def test_registry_separates_combos():
+    from repro.core.expmodel import exp_model
+    rows = []
+    bbs = np.array([1, 2, 4, 8, 16, 32, 64], float)
+    for model, c in (("m1", 1000.0), ("m2", 4000.0)):
+        for ii in (128.0, 512.0):
+            for oo in (128.0, 256.0):
+                for bb, t in zip(bbs, exp_model(bbs, 0.9 * c, 0.08, c)):
+                    rows.append(dict(model=model, acc="hw", acc_count=1,
+                                     back="f", prec="bf16", mode="serve",
+                                     ii=ii, oo=oo, bb=bb, thpt=t))
+    ds = Dataset.from_rows(rows)
+    reg = ModelRegistry().fit(ds, n_estimators=20)
+    assert len(reg.combos) == 2
+    pred = reg.predict(ds)
+    ape = np.abs(pred - ds["thpt"]) / ds["thpt"]
+    assert np.median(ape) < 0.05
+    # the two combos saturate at very different levels
+    m1 = pred[ds["model"] == "m1"].max()
+    m2 = pred[ds["model"] == "m2"].max()
+    assert m2 > 2 * m1

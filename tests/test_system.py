@@ -1,0 +1,144 @@
+"""End-to-end behaviour tests for the full system: serving engine, ALA on
+real measured data, capacity planning, trainer fault tolerance."""
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.configs.common import SMOKE_TRAIN
+from repro.configs.shapes import ShapeSpec
+from repro.core.ala import ALA, ALAConfig
+from repro.core.annealing import SAConfig, median_ape
+from repro.inference.engine import ServingEngine
+from repro.inference.scheduler import BatchingQueue, CapacityPlanner, Request
+from repro.models.transformer import Model
+from repro.training.train_loop import TrainConfig, Trainer
+from repro.training.optimizer import AdamWConfig
+
+
+@pytest.fixture(scope="module")
+def tiny_engine():
+    cfg = get_smoke_config("llama3.2-3b")
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    return ServingEngine(model, params)
+
+
+def test_engine_generates_tokens(tiny_engine):
+    prompts = np.random.default_rng(0).integers(0, 255, (2, 16),
+                                                dtype=np.int32)
+    res = tiny_engine.generate(prompts, max_new_tokens=8)
+    assert res.tokens.shape == (2, 8)
+    assert res.tokens_per_s > 0
+    assert (res.tokens >= 0).all() and \
+        (res.tokens < tiny_engine.model.cfg.vocab_size).all()
+
+
+def test_engine_throughput_rows(tiny_engine):
+    rows = tiny_engine.measure_throughput(ii=16, oo=4, bb=2, reps=2)
+    assert len(rows) == 2
+    assert all(r["thpt"] > 0 for r in rows)
+
+
+def test_ala_on_real_measured_data(tiny_engine):
+    """The full paper loop on genuinely measured (CPU) throughput."""
+    rows = []
+    for bb in (1, 2, 4, 8):
+        for ii, oo in ((8, 4), (16, 4)):
+            rows.extend(tiny_engine.measure_throughput(ii, oo, bb, reps=2))
+    ii = np.array([r["ii"] for r in rows], float)
+    oo = np.array([r["oo"] for r in rows], float)
+    bb = np.array([r["bb"] for r in rows], float)
+    th = np.array([r["thpt"] for r in rows], float)
+    ala = ALA().fit(ii, oo, bb, th)
+    err = ala.score(ii, oo, bb, th)
+    assert err < 35.0, f"in-sample median APE {err}%"
+
+
+def test_capacity_planner_monotone():
+    from repro.core.expmodel import exp_model
+    bbs = np.array([1, 2, 4, 8, 16, 32, 64, 128], float)
+    rows_ii, rows_oo, rows_bb, rows_t = [], [], [], []
+    for ii in (128.0, 512.0):
+        for oo in (128.0, 256.0):
+            y = exp_model(bbs, 900.0, 0.05, 1000.0 + ii / 10)
+            rows_ii += [ii] * len(bbs)
+            rows_oo += [oo] * len(bbs)
+            rows_bb += bbs.tolist()
+            rows_t += y.tolist()
+    ala = ALA().fit(np.array(rows_ii), np.array(rows_oo),
+                    np.array(rows_bb), np.array(rows_t))
+    planner = CapacityPlanner(ala, candidate_bb=(1, 2, 4, 8, 16, 32, 64,
+                                                 128))
+    lo = planner.plan_batch_size(128, 128, target_thpt=300.0)
+    hi = planner.plan_batch_size(128, 128, target_thpt=900.0)
+    assert lo.bb <= hi.bb
+    assert hi.predicted_thpt >= 900.0 * 0.5
+    # unattainable target scales out
+    huge = planner.plan_batch_size(128, 128, target_thpt=50_000.0)
+    assert huge.replicas > 1
+
+
+def test_batching_queue_groups_by_bucket():
+    from repro.core.expmodel import exp_model
+    bbs = np.array([1, 2, 4, 8], float)
+    y = exp_model(bbs, 90.0, 0.3, 100.0)
+    ala = ALA().fit(np.full(4, 128.0), np.full(4, 128.0), bbs, y)
+    planner = CapacityPlanner(ala, candidate_bb=(1, 2, 4))
+    q = BatchingQueue(planner, target_thpt=60.0)
+    for i in range(10):
+        q.submit(Request(rid=i, ii=100, oo=120))
+    batches = q.ready_batches()
+    assert batches, "expected at least one ready batch"
+    key, reqs = batches[0]
+    assert key == (128, 128)
+    plan = q.plans[key]
+    assert len(reqs) == plan.bb
+
+
+def test_trainer_checkpoint_restart(tmp_path):
+    """Fault-tolerance drill: train 6 steps, 'crash', resume from ckpt —
+    final params must equal an uninterrupted 12-step run."""
+    cfg = get_smoke_config("qwen3-0.6b")
+    shape = ShapeSpec("t", seq_len=16, global_batch=2, kind="train")
+    opt = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=12)
+
+    def make(dirname, total):
+        t = Trainer(Model(cfg), shape, None,
+                    TrainConfig(total_steps=total, ckpt_every=6,
+                                ckpt_dir=str(tmp_path / dirname),
+                                log_every=100, opt=opt))
+        return t
+
+    # uninterrupted run
+    t_full = make("full", 12)
+    p_full, _ = t_full.run(seed=3)
+
+    # interrupted run: 6 steps, then a fresh Trainer resumes to 12
+    t_a = make("resume", 6)
+    t_a.run(seed=3)
+    t_b = make("resume", 12)
+    p_res, _ = t_b.run(seed=3)
+
+    flat_full = jax.tree_util.tree_leaves(p_full)
+    flat_res = jax.tree_util.tree_leaves(p_res)
+    for a, b in zip(flat_full, flat_res):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-4, atol=2e-5)
+
+
+def test_trainer_loss_decreases(tmp_path):
+    cfg = get_smoke_config("llama3.2-3b")
+    shape = ShapeSpec("t", seq_len=32, global_batch=4, kind="train")
+    t = Trainer(Model(cfg), shape, None,
+                TrainConfig(total_steps=30, ckpt_every=1000,
+                            ckpt_dir=str(tmp_path / "ck"), log_every=1000,
+                            opt=AdamWConfig(lr=3e-3, warmup_steps=5,
+                                            total_steps=30)))
+    t.run(seed=0)
+    first = np.mean([h["loss"] for h in t.history[:5]])
+    last = np.mean([h["loss"] for h in t.history[-5:]])
+    assert last < first - 0.1, (first, last)
