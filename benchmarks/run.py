@@ -15,11 +15,17 @@ writes a JSON report to results/bench_report.json for EXPERIMENTS.md.
                             incl. the hardware-mismatch case
   perf_vmapped_fit        — beyond-paper: batched-LM fit vs scalar numpy
   perf_kernels            — kernel oracle timings (CPU reference path)
+  sa_engine               — legacy serial SA vs the batched K-chain engine
+                            (equal proposal budget; emits BENCH_sa.json)
+
+Run everything:          PYTHONPATH=src python benchmarks/run.py
+Run one benchmark:       PYTHONPATH=src python benchmarks/run.py sa_engine
 """
 from __future__ import annotations
 
 import json
 import pathlib
+import sys
 import time
 
 import numpy as np
@@ -305,21 +311,94 @@ def perf_kernels():
     REPORT["perf_kernels_cpu_ref_us"] = out
 
 
+def sa_engine(n_proposals: int = 60, n_chains: int = 4):
+    """Legacy serial SA vs the batched K-chain engine at an equal
+    proposal budget.  Both engines score subsets with the same inner
+    GBT; the batched one wins on architecture: a fixed-shape masked LM
+    solve (one XLA compile per process instead of one per padded subset
+    shape), a shared fingerprint cache across chains, vectorized subset
+    masking, and candidate/output-joint GBT growth.  Writes
+    results/BENCH_sa.json."""
+    from repro.core.annealing import SAConfig, anneal, anneal_batched
+    ds, (train, test) = _data()
+    gbt_kw = dict(n_estimators=40, learning_rate=0.2, max_depth=4)
+
+    cfg_legacy = SAConfig(n_iters=n_proposals, seed=0, gbt_kw=gbt_kw)
+    log_l, us_l = _timed(lambda: anneal(train.workload, test.workload,
+                                        cfg_legacy))
+
+    cfg_batched = SAConfig(n_iters=n_proposals // n_chains, seed=0,
+                           gbt_kw=gbt_kw, n_chains=n_chains)
+    log_b, us_b = _timed(lambda: anneal_batched(train.workload,
+                                                test.workload, cfg_batched))
+
+    speedup = us_l / max(us_b, 1e-9)
+    out = {
+        "n_proposals": n_proposals,
+        "n_chains": n_chains,
+        # best_error: what each engine reports (legacy = final chain
+        # state; batched = global min).  best_ape: min over every logged
+        # evaluation — the like-for-like quality comparison.
+        "legacy": {"wall_s": us_l / 1e6,
+                   "best_error": float(log_l.best_error),
+                   "best_ape": float(min(log_l.errors)),
+                   "n_evals": len(log_l.errors)},
+        "batched": {"wall_s": us_b / 1e6,
+                    "best_error": float(log_b.best_error),
+                    "best_ape": float(min(log_b.errors)),
+                    "n_evals": len(log_b.errors)},
+        "speedup": speedup,
+        "equal_or_better_ape": bool(min(log_b.errors) <= min(log_l.errors)),
+    }
+    REPORT["sa_engine"] = out
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / "BENCH_sa.json").write_text(json.dumps(out, indent=1))
+    _emit("sa_engine_legacy", us_l, f"best_medAPE={log_l.best_error:.2f}%")
+    _emit("sa_engine_batched", us_b,
+          f"best_medAPE={log_b.best_error:.2f}%;speedup={speedup:.1f}x")
+    return out
+
+
+BENCHMARKS = {}
+
+
 def main() -> None:
+    names = sys.argv[1:]
+    for n in names:
+        if n not in BENCHMARKS:
+            print(f"unknown benchmark {n!r}; available: "
+                  f"{', '.join(BENCHMARKS)}")
+            raise SystemExit(2)
     print("name,us_per_call,derived")
     t0 = time.time()
-    fig2_exponential_fits()
-    fig3_param_prediction()
-    fig6_rq1_training_sets()
-    fig7_rq2_baselines()
-    fig8_rq3_model_zoo()
-    table1_rq4_uncertainty()
-    perf_vmapped_fit()
-    perf_kernels()
+    for name, fn in BENCHMARKS.items():
+        if names and name not in names:
+            continue
+        fn()
     RESULTS.mkdir(parents=True, exist_ok=True)
-    (RESULTS / "bench_report.json").write_text(json.dumps(REPORT, indent=1))
-    print(f"# total {time.time() - t0:.1f}s; report -> "
-          f"{RESULTS / 'bench_report.json'}")
+    report_path = RESULTS / "bench_report.json"
+    report = REPORT
+    if names and report_path.exists():
+        # partial run: merge into the aggregate instead of clobbering it
+        try:
+            report = {**json.loads(report_path.read_text()), **REPORT}
+        except json.JSONDecodeError:
+            pass
+    report_path.write_text(json.dumps(report, indent=1))
+    print(f"# total {time.time() - t0:.1f}s; report -> {report_path}")
+
+
+BENCHMARKS.update({
+    "fig2_exponential_fits": fig2_exponential_fits,
+    "fig3_param_prediction": fig3_param_prediction,
+    "fig6_rq1_training_sets": fig6_rq1_training_sets,
+    "fig7_rq2_baselines": fig7_rq2_baselines,
+    "fig8_rq3_model_zoo": fig8_rq3_model_zoo,
+    "table1_rq4_uncertainty": table1_rq4_uncertainty,
+    "perf_vmapped_fit": perf_vmapped_fit,
+    "perf_kernels": perf_kernels,
+    "sa_engine": sa_engine,
+})
 
 
 if __name__ == "__main__":

@@ -13,10 +13,12 @@ from repro.inference.scheduler import BatchingQueue, CapacityPlanner, Request
 ds = make_inhouse_dataset()
 train, test = train_test_split(ds, test_frac=0.3)
 ala = ALA()
-ala.cfg.sa = SAConfig(n_iters=25, gbt_kw=dict(n_estimators=30,
-                                              learning_rate=0.2))
+# 4 SA chains x 8 steps through the batched engine: same 25-ish proposal
+# budget as the old serial loop, a fraction of the wall clock
+ala.cfg.sa = SAConfig(n_iters=8, gbt_kw=dict(n_estimators=30,
+                                             learning_rate=0.2))
 ala.fit(*train.workload)
-ala.explore(test.workload)
+ala.explore(test.workload, n_chains=4)
 ala.fit_error()
 
 planner = CapacityPlanner(ala)

@@ -69,11 +69,20 @@ class ALA:
 
     # -- Alg 6 ----------------------------------------------------------------
     def explore(self, test, initial: Optional[Subset] = None,
-                on_iter=None) -> SALog:
+                on_iter=None, n_chains: Optional[int] = None) -> SALog:
+        """Alg 6.  ``n_chains > 1`` (argument or ``cfg.sa.n_chains``)
+        routes through the batched K-chain engine with its shared
+        evaluation cache; the default stays on the serial loop."""
         assert self._train is not None, "fit() first"
         t0 = time.perf_counter()
-        self.sa_log = annealing.anneal(self._train, test, self.cfg.sa,
-                                       initial=initial, on_iter=on_iter)
+        k = self.cfg.sa.n_chains if n_chains is None else n_chains
+        if k > 1:
+            cfg = dataclasses.replace(self.cfg.sa, n_chains=k)
+            self.sa_log = annealing.anneal_batched(
+                self._train, test, cfg, initial=initial, on_iter=on_iter)
+        else:
+            self.sa_log = annealing.anneal(self._train, test, self.cfg.sa,
+                                           initial=initial, on_iter=on_iter)
         self.timings["explore_s"] = time.perf_counter() - t0
         return self.sa_log
 

@@ -105,6 +105,34 @@ def fit_exponential_groups(groups):
     return theta
 
 
+def fit_exponential_masked(theta0, X, Y, W):
+    """Fixed-shape batched LM: (G, maxn) rectangles with 0/1 row weights.
+
+    The batched annealing engine calls this with the *same* (G, maxn)
+    every evaluation — subset membership only flips weights — so the
+    vmapped solver compiles exactly once per process, where the ragged
+    ``fit_exponential_groups`` path recompiles for every new padded
+    shape.  Zero-weight rows contribute nothing to the residuals (they
+    are scaled by w inside the solver), and all-zero groups take no LM
+    step (J = 0 => delta = 0), returning theta0 for the caller to mask.
+
+    theta0: (G, 3); X/Y/W: (G, maxn).  Returns float64 (G, 3).
+    """
+    X = np.asarray(X, np.float64)
+    Y = np.asarray(Y, np.float64)
+    W = np.asarray(W, np.float64)
+    s = np.maximum(np.max(np.abs(Y) * (W > 0), axis=1), 1e-9)
+    T0 = np.asarray(theta0, np.float64) \
+        * np.stack([1.0 / s, np.ones_like(s), 1.0 / s], axis=1)
+    theta = np.asarray(_fit_batch(jnp.asarray(T0, jnp.float32),
+                                  jnp.asarray(X, jnp.float32),
+                                  jnp.asarray(Y / s[:, None], jnp.float32),
+                                  jnp.asarray(W, jnp.float32)), np.float64)
+    theta[:, 0] *= s
+    theta[:, 2] *= s
+    return theta
+
+
 def fit_exponential_numpy(bb, thpt, theta0, iters: int = 200):
     """Reference scalar LM in numpy (oracle for property tests)."""
     theta = np.asarray(theta0, np.float64).copy()

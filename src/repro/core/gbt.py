@@ -4,9 +4,23 @@ Second-order boosting in the XGBoost sense [Chen & Guestrin, KDD'16]:
 quantile-binned features, per-node gradient/hessian histograms, gain
   0.5 * (GL^2/(HL+l) + GR^2/(HR+l) - G^2/(H+l))
 shrinkage, row subsampling, and hessian-weighted leaves.  Level-wise
-growth, fully vectorized over nodes with ``np.add.at`` histograms; the
-Pallas ``gbt_hist`` kernel provides the TPU path for the same histogram
-build (``use_kernel=True`` routes through it in interpret/jnp form).
+growth, fully vectorized over nodes; the Pallas ``gbt_hist`` kernel
+provides the TPU path for the same histogram build (``use_kernel=True``
+routes every level's build through it instead of the host scatter-add).
+
+Two training paths produce identical trees:
+
+  * ``GBTRegressor.fit`` — the original single-model path (supports
+    row/column subsampling).
+  * ``fit_packed_forest`` — a *batched* trainer that grows the forests
+    of many (candidate, output) problems in lockstep, vectorizing the
+    histogram/gain/split math across all of them.  Excluded rows carry
+    zero gradient/hessian weight, which leaves every sum bitwise
+    unchanged, so the trees match the per-model path exactly.
+
+Fitted trees flatten into ``PackedForest`` arrays and predict through a
+jit'd ``jax.vmap`` gather traversal (``backend="jax"``) — the inference
+path the batched annealing engine uses.
 
 This is the learning component of ALA (paper Alg 3/7) and of the RF/GB
 baselines (Fig 7).
@@ -83,12 +97,9 @@ class GBTRegressor:
     def _histograms(self, bins, grad, hess, node_id, n_nodes):
         """(n_nodes, f, n_bins, 2) gradient/hessian histograms."""
         n, f = bins.shape
-        if self.use_kernel and n_nodes == 1:
-            from repro.kernels.gbt_hist import ops as gh_ops
-            h = np.asarray(gh_ops.build_histograms(
-                bins, grad.astype(np.float32), hess.astype(np.float32),
-                n_bins=self.n_bins, force="interpret"))
-            return h[None]
+        if self.use_kernel:
+            return kernel_histograms(bins, grad, hess, node_id, n_nodes,
+                                     self.n_bins)
         hist = np.zeros((n_nodes, f, self.n_bins, 2), np.float64)
         fidx = np.broadcast_to(np.arange(f)[None, :], bins.shape)
         nidx = np.broadcast_to(node_id[:, None], bins.shape)
@@ -193,6 +204,7 @@ class GBTRegressor:
         self.base_ = float(y.mean()) if len(y) else 0.0
         pred = np.full_like(y, self.base_)
         self.trees_ = []
+        self._packed = None
         for t in range(self.n_estimators):
             grad = pred - y
             hess = np.ones_like(y)
@@ -207,8 +219,15 @@ class GBTRegressor:
             pred += self.learning_rate * tree.predict_bins(bins)
         return self
 
-    def predict(self, X: np.ndarray) -> np.ndarray:
+    def predict(self, X: np.ndarray, backend: str = "numpy") -> np.ndarray:
+        """Predict; ``backend="jax"`` flattens the forest once and runs the
+        jit'd vmap/gather traversal (``PackedForest``)."""
         X = np.asarray(X, np.float64)
+        if backend == "jax":
+            packed = getattr(self, "_packed", None)
+            if packed is None:
+                packed = self._packed = pack_models([[self]])
+            return packed.predict(X[None], backend="jax")[0, :, 0]
         bins = self._transform_bins(X)
         out = np.full(X.shape[0], self.base_, np.float64)
         for tree in self.trees_:
@@ -217,17 +236,47 @@ class GBTRegressor:
 
 
 class MultiOutputGBT:
-    """One GBTRegressor per target column (paper: MultiOutputRegressor)."""
+    """One GBTRegressor per target column (paper: MultiOutputRegressor).
+
+    When no row/column subsampling is configured, ``fit`` grows all
+    output forests jointly through ``fit_packed_forest`` (identical
+    trees, one pass of vectorized level-wise growth instead of
+    ``n_outputs`` sequential fits).
+    """
 
     def __init__(self, n_outputs: int, **kw):
         seed = kw.pop("seed", 0)
         self.models = [GBTRegressor(seed=seed + i, **kw)
                        for i in range(n_outputs)]
 
-    def fit(self, X, Y):
+    def fit(self, X, Y, joint: Optional[bool] = None):
         Y = np.asarray(Y)
-        for i, m in enumerate(self.models):
-            m.fit(X, Y[:, i])
+        can_joint = all(m.subsample >= 1.0 and m.colsample >= 1.0
+                        for m in self.models)
+        if joint is None:
+            joint = can_joint
+        if not (joint and can_joint and len(self.models)):
+            for i, m in enumerate(self.models):
+                m.fit(X, Y[:, i])
+            return self
+        m0 = self.models[0]
+        forest = fit_packed_forest(
+            np.asarray(X, np.float64)[None], Y[None],
+            n_estimators=m0.n_estimators, learning_rate=m0.learning_rate,
+            max_depth=m0.max_depth, n_bins=m0.n_bins,
+            min_child_weight=m0.min_child_weight, reg_lambda=m0.reg_lambda,
+            use_kernel=m0.use_kernel)
+        for o, m in enumerate(self.models):
+            m.base_ = float(forest.base[0, o])
+            m.bin_edges_ = forest.bin_edges[0].copy()
+            m.trees_ = [
+                _Tree(feature=forest.feature[0, o, t, :nn].copy(),
+                      threshold=forest.threshold[0, o, t, :nn].copy(),
+                      left=forest.left[0, o, t, :nn].copy(),
+                      right=forest.right[0, o, t, :nn].copy(),
+                      value=forest.value[0, o, t, :nn].copy())
+                for t, nn in enumerate(forest.n_nodes[0, o])]
+            m._packed = None
         return self
 
     def predict(self, X):
@@ -263,6 +312,372 @@ class RandomForestRegressor:
 
     def predict(self, X):
         return np.mean([m.predict(X) for m in self.members_], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Packed forests: flattened tree arrays + batched training / jit inference
+# ---------------------------------------------------------------------------
+
+def kernel_histograms(bins, grad, hess, node_id, n_nodes, n_bins,
+                      force: Optional[str] = None):
+    """Per-node histograms through the Pallas ``gbt_hist`` op.
+
+    Node separation happens inside the op (`build_node_histograms`) via
+    zero-masked weights — a zero-weight row adds exactly 0.0 to every
+    bin, which keeps the sums identical to the scatter-add path — so one
+    XLA call covers the whole tree level.  Dispatch (kernel on TPU, jnp
+    oracle elsewhere) lives in ``kernels.gbt_hist.ops``.
+    """
+    from repro.kernels.gbt_hist import ops as gh_ops
+    n = bins.shape[0]
+    # level-wise growth compacts rows, so n varies per (tree, level);
+    # pad to the next power of two with zero weights to bound the jit'd
+    # op to O(log n) compiled shapes instead of one per level
+    n_pad = max(64, 1 << int(np.ceil(np.log2(max(n, 1)))))
+    pad = n_pad - n
+    bins32 = np.zeros((n_pad, bins.shape[1]), np.int32)
+    bins32[:n] = bins
+    g32 = np.zeros(n_pad, np.float32)
+    g32[:n] = grad
+    h32 = np.zeros(n_pad, np.float32)
+    h32[:n] = hess
+    nid = np.zeros(n_pad, np.int32)
+    nid[:n] = node_id
+    h = gh_ops.build_node_histograms(
+        bins32, g32, h32, nid, n_nodes=n_nodes, n_bins=n_bins, force=force)
+    return np.asarray(h, np.float64)
+
+
+@dataclasses.dataclass
+class PackedForest:
+    """Fitted GBT forests flattened to arrays, batched over a grid of
+    ``(C candidates, O outputs)`` independent models.
+
+    ``feature[c, o, t, n] < 0`` marks node ``n`` of tree ``t`` as a leaf;
+    internal nodes route rows left when ``bin <= threshold``.  This is
+    the jit-compatible inference form: prediction is a fixed-depth
+    gather traversal vmapped over trees, outputs, and candidates.
+    """
+    feature: np.ndarray     # (C, O, T, N) int32, -1 for leaf
+    threshold: np.ndarray   # (C, O, T, N) int32 bin ids
+    left: np.ndarray        # (C, O, T, N) int32
+    right: np.ndarray       # (C, O, T, N) int32
+    value: np.ndarray       # (C, O, T, N) float32 leaf values
+    base: np.ndarray        # (C, O) float64
+    bin_edges: np.ndarray   # (C, f, n_bins - 1) float64
+    n_nodes: np.ndarray     # (C, O, T) int32 used-node counts
+    learning_rate: float
+    max_depth: int
+
+    def transform_bins(self, X: np.ndarray) -> np.ndarray:
+        """X: (C, m, f) raw features -> (C, m, f) int32 bin ids."""
+        C, m, f = X.shape
+        bins = np.empty((C, m, f), np.int32)
+        for c in range(C):
+            for j in range(f):
+                bins[c, :, j] = np.searchsorted(self.bin_edges[c, j],
+                                                X[c, :, j], side="right")
+        return bins
+
+    def predict(self, X: np.ndarray, backend: str = "jax") -> np.ndarray:
+        """X: (C, m, f) -> (C, m, O) predictions."""
+        bins = self.transform_bins(np.asarray(X, np.float64))
+        if backend == "jax":
+            leaf = np.asarray(_forest_apply_jax(
+                self.feature, self.threshold, self.left, self.right,
+                self.value, bins, self.max_depth), np.float64)
+        else:
+            leaf = self._apply_numpy(bins)
+        out = self.base[:, :, None] + self.learning_rate * leaf.sum(axis=2)
+        return np.moveaxis(out, 1, 2)        # (C, m, O)
+
+    def _apply_numpy(self, bins: np.ndarray) -> np.ndarray:
+        """(C, O, T, m) leaf values via vectorized numpy traversal."""
+        C, O, T, N = self.feature.shape
+        m = bins.shape[1]
+        out = np.empty((C, O, T, m), np.float64)
+        for c in range(C):
+            rows = bins[c]                                # (m, f)
+            for o in range(O):
+                nd = np.zeros((T, m), np.int64)
+                ft = self.feature[c, o].astype(np.int64)  # (T, N)
+                th = self.threshold[c, o]
+                lf = self.left[c, o].astype(np.int64)
+                rt = self.right[c, o].astype(np.int64)
+                for _ in range(self.max_depth + 1):
+                    f_ = np.take_along_axis(ft, nd, 1)
+                    isleaf = f_ < 0
+                    rb = rows[np.arange(m)[None, :], np.maximum(f_, 0)]
+                    go_left = rb <= np.take_along_axis(th, nd, 1)
+                    nxt = np.where(go_left, np.take_along_axis(lf, nd, 1),
+                                   np.take_along_axis(rt, nd, 1))
+                    nd = np.where(isleaf, nd, nxt)
+                out[c, o] = np.take_along_axis(
+                    self.value[c, o].astype(np.float64), nd, 1)
+        return out
+
+
+def _forest_apply_jax(feature, threshold, left, right, value, bins,
+                      max_depth: int):
+    """Jit'd leaf lookup: (C, O, T, N) forests x (C, m, f) bins ->
+    (C, O, T, m) leaf values.  vmap over candidates/outputs/trees; the
+    traversal is ``max_depth + 1`` gather steps (leaves are absorbing)."""
+    import jax
+
+    return _forest_apply_jit(feature, threshold, left, right, value,
+                             jax.numpy.asarray(bins), max_depth)
+
+
+def _make_forest_apply():
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+
+    @functools.partial(jax.jit, static_argnames=("max_depth",))
+    def apply(feature, threshold, left, right, value, bins, max_depth):
+        def one_tree(ft, th, lf, rt, vl, rows):
+            nd = jnp.zeros(rows.shape[0], jnp.int32)
+            for _ in range(max_depth + 1):
+                f_ = ft[nd]
+                isleaf = f_ < 0
+                rb = jnp.take_along_axis(
+                    rows, jnp.maximum(f_, 0)[:, None], axis=1)[:, 0]
+                nxt = jnp.where(rb <= th[nd], lf[nd], rt[nd])
+                nd = jnp.where(isleaf, nd, nxt)
+            return vl[nd]
+
+        over_t = jax.vmap(one_tree, in_axes=(0, 0, 0, 0, 0, None))
+        over_o = jax.vmap(over_t, in_axes=(0, 0, 0, 0, 0, None))
+        over_c = jax.vmap(over_o, in_axes=(0, 0, 0, 0, 0, 0))
+        return over_c(feature, threshold, left, right, value, bins)
+
+    return apply
+
+
+class _LazyForestApply:
+    """Defer jax import/compile until the jax backend is first used."""
+
+    def __init__(self):
+        self._fn = None
+
+    def __call__(self, *args):
+        if self._fn is None:
+            self._fn = _make_forest_apply()
+        return self._fn(*args)
+
+
+_forest_apply_jit = _LazyForestApply()
+
+
+def pack_models(models: List[List[GBTRegressor]]) -> PackedForest:
+    """Flatten a (C, O) grid of fitted GBTRegressors into a PackedForest."""
+    C, O = len(models), len(models[0])
+    T = max(len(m.trees_) for row in models for m in row)
+    N = max([1] + [len(t.feature) for row in models for m in row
+                   for t in m.trees_])
+    m0 = models[0][0]
+    shape = (C, O, T, N)
+    feature = np.full(shape, -1, np.int32)
+    threshold = np.zeros(shape, np.int32)
+    left = np.zeros(shape, np.int32)
+    right = np.zeros(shape, np.int32)
+    value = np.zeros(shape, np.float32)
+    n_nodes = np.ones((C, O, T), np.int32)
+    base = np.zeros((C, O), np.float64)
+    edges = np.stack([row[0].bin_edges_ for row in models])
+    for c, row in enumerate(models):
+        for o, m in enumerate(row):
+            base[c, o] = m.base_
+            for t, tree in enumerate(m.trees_):
+                nn = len(tree.feature)
+                n_nodes[c, o, t] = nn
+                feature[c, o, t, :nn] = tree.feature
+                threshold[c, o, t, :nn] = tree.threshold
+                left[c, o, t, :nn] = tree.left
+                right[c, o, t, :nn] = tree.right
+                value[c, o, t, :nn] = tree.value
+    return PackedForest(feature=feature, threshold=threshold, left=left,
+                        right=right, value=value, base=base,
+                        bin_edges=edges, n_nodes=n_nodes,
+                        learning_rate=m0.learning_rate,
+                        max_depth=m0.max_depth)
+
+
+def _joint_histograms(bins, grad, hess, node, nlvl, n_bins,
+                      use_kernel=False):
+    """(L, n, f) bins + (L, n) grad/hess + (L, n) level-local node ids ->
+    (L, nlvl, f, n_bins) gradient and hessian histograms (bincount)."""
+    L, n, f = bins.shape
+    if use_kernel:
+        hg = np.empty((L, nlvl, f, n_bins), np.float64)
+        hh = np.empty((L, nlvl, f, n_bins), np.float64)
+        for li in range(L):
+            h = kernel_histograms(bins[li], grad[li], hess[li], node[li],
+                                  nlvl, n_bins)
+            hg[li] = h[..., 0]
+            hh[li] = h[..., 1]
+        return hg, hh
+    size = L * nlvl * f * n_bins
+    l_off = (np.arange(L, dtype=np.int64)
+             * (nlvl * f * n_bins))[:, None, None]
+    flat = ((node[:, :, None].astype(np.int64) * f
+             + np.arange(f, dtype=np.int64)) * n_bins + bins + l_off)
+    flat = flat.ravel()
+    gw = np.broadcast_to(grad[:, :, None], (L, n, f)).ravel()
+    hw = np.broadcast_to(hess[:, :, None], (L, n, f)).ravel()
+    hist_g = np.bincount(flat, gw, minlength=size) \
+        .reshape(L, nlvl, f, n_bins)
+    hist_h = np.bincount(flat, hw, minlength=size) \
+        .reshape(L, nlvl, f, n_bins)
+    return hist_g, hist_h
+
+
+def fit_packed_forest(X, Y, W=None, n_estimators: int = 100,
+                      learning_rate: float = 0.1, max_depth: int = 4,
+                      n_bins: int = 64, min_child_weight: float = 1.0,
+                      reg_lambda: float = 1.0,
+                      use_kernel: bool = False) -> PackedForest:
+    """Grow GBT forests for a batch of problems in one vectorized pass.
+
+    X: (C, n, f) features, Y: (C, n, O) targets, W: (C, n) 0/1 row
+    weights (None = all rows).  All C x O forests grow level-by-level in
+    lockstep; rows excluded by W (or parked at a finished leaf) keep
+    zero gradient/hessian so every histogram sum matches the per-model
+    ``GBTRegressor.fit`` bitwise.  Returns a ``PackedForest``.
+    """
+    X = np.asarray(X, np.float64)
+    Y = np.asarray(Y, np.float64)
+    assert X.ndim == 3 and Y.ndim == 3 and Y.shape[:2] == X.shape[:2]
+    C, n, f = X.shape
+    O = Y.shape[2]
+    W = np.ones((C, n), np.float64) if W is None \
+        else np.asarray(W, np.float64)
+    L = C * O
+    lam = reg_lambda
+
+    # -- per-candidate quantile binning (masked rows excluded) --------------
+    qs = np.linspace(0, 1, n_bins + 1)[1:-1]
+    Xm = np.where(W[:, :, None] > 0, X, np.nan)
+    edges = np.moveaxis(np.nanquantile(Xm, qs, axis=1), 0, -1)  # (C, f, E)
+    bins_c = np.empty((C, n, f), np.int32)
+    for c in range(C):
+        for j in range(f):
+            bins_c[c, :, j] = np.searchsorted(edges[c, j], X[c, :, j],
+                                              side="right")
+    bins = np.repeat(bins_c, O, axis=0)                       # (L, n, f)
+    yT = np.moveaxis(Y, 2, 1).reshape(L, n)                   # l = c*O + o
+    Wl = np.repeat(W, O, axis=0)
+    # mean over the *compacted* included rows: np.mean sums pairwise, so
+    # a padded weighted sum can differ in the last ulp and flip a split
+    base = np.array([yT[l, Wl[l] > 0].mean() if (Wl[l] > 0).any() else 0.0
+                     for l in range(L)])
+    pred = np.broadcast_to(base[:, None], (L, n)).copy()
+
+    N = 2 ** (max_depth + 1) - 1
+    F = np.full((L, n_estimators, N), -1, np.int32)
+    TH = np.zeros((L, n_estimators, N), np.int32)
+    LE = np.zeros((L, n_estimators, N), np.int32)
+    RI = np.zeros((L, n_estimators, N), np.int32)
+    V = np.zeros((L, n_estimators, N), np.float32)
+    NN = np.ones((L, n_estimators), np.int32)
+
+    for t in range(n_estimators):
+        F_t, TH_t, LE_t, RI_t, V_t = (a[:, t] for a in (F, TH, LE, RI, V))
+        alive = Wl > 0
+        grad = (pred - yT) * alive
+        hess = Wl * alive
+        node = np.zeros((L, n), np.int64)
+        gid = np.zeros((L, 1), np.int64)
+        valid = np.ones((L, 1), bool)
+        next_free = np.ones(L, np.int64)
+
+        for depth in range(max_depth + 1):
+            nlvl = gid.shape[1]
+            hist_g, hist_h = _joint_histograms(bins, grad, hess, node,
+                                               nlvl, n_bins, use_kernel)
+            Gtot = hist_g.sum(axis=-1)[..., 0]        # (L, nlvl)
+            Htot = hist_h.sum(axis=-1)[..., 0]
+            leaf_val = -Gtot / (Htot + lam)
+            if depth == max_depth:
+                li, lj = np.nonzero(valid)
+                V_t[li, gid[li, lj]] = leaf_val[li, lj]
+                break
+            GL = np.cumsum(hist_g, axis=-1)
+            HL = np.cumsum(hist_h, axis=-1)
+            GR = Gtot[..., None, None] - GL
+            HR = Htot[..., None, None] - HL
+            gain = 0.5 * (GL ** 2 / (HL + lam) + GR ** 2 / (HR + lam)
+                          - (Gtot ** 2 / (Htot + lam))[..., None, None])
+            ok = (HL >= min_child_weight) & (HR >= min_child_weight)
+            ok[..., -1] = False
+            gain = np.where(ok, gain, -np.inf)
+            flat = gain.reshape(L, nlvl, f * n_bins)
+            best = flat.argmax(axis=-1)
+            best_gain = np.take_along_axis(flat, best[..., None],
+                                           axis=-1)[..., 0]
+            best_f = (best // n_bins).astype(np.int64)
+            best_b = (best % n_bins).astype(np.int64)
+            split = valid & np.isfinite(best_gain) & (best_gain > 1e-12)
+
+            li, lj = np.nonzero(valid & ~split)
+            V_t[li, gid[li, lj]] = leaf_val[li, lj]
+            if not split.any():
+                break
+            k = np.cumsum(split, axis=1)
+            n_new = 2 * k[:, -1]
+            base_local = 2 * (k - 1)                  # child level index
+            si, sj = np.nonzero(split)
+            sg = gid[si, sj]
+            F_t[si, sg] = best_f[si, sj].astype(np.int32)
+            TH_t[si, sg] = best_b[si, sj].astype(np.int32)
+            LE_t[si, sg] = (next_free[si] + base_local[si, sj]) \
+                .astype(np.int32)
+            RI_t[si, sg] = (next_free[si] + base_local[si, sj] + 1) \
+                .astype(np.int32)
+            new_nlvl = int(n_new.max())
+            gid = next_free[:, None] + np.arange(new_nlvl)[None, :]
+            valid = np.arange(new_nlvl)[None, :] < n_new[:, None]
+            next_free = next_free + n_new
+
+            rsplit = np.take_along_axis(split, node, axis=1)
+            bf = np.take_along_axis(best_f, node, axis=1)
+            bthr = np.take_along_axis(best_b, node, axis=1)
+            rowbin = np.take_along_axis(bins, np.maximum(bf, 0)[..., None],
+                                        axis=2)[..., 0]
+            go_right = rowbin > bthr
+            nbase = np.take_along_axis(base_local, node, axis=1)
+            node = np.where(rsplit, nbase + go_right, 0)
+            alive &= rsplit
+            grad *= alive
+            hess *= alive
+
+        NN[:, t] = np.minimum(next_free, N).astype(np.int32)
+
+        # boosting update on the training rows (fixed-depth traversal)
+        nd = np.zeros((L, n), np.int64)
+        ftl = F_t.astype(np.int64)
+        lfl = LE_t.astype(np.int64)
+        rtl = RI_t.astype(np.int64)
+        for _ in range(max_depth + 1):
+            f_ = np.take_along_axis(ftl, nd, axis=1)
+            isleaf = f_ < 0
+            rb = np.take_along_axis(bins, np.maximum(f_, 0)[..., None],
+                                    axis=2)[..., 0]
+            go_left = rb <= np.take_along_axis(TH_t, nd, axis=1)
+            nxt = np.where(go_left, np.take_along_axis(lfl, nd, axis=1),
+                           np.take_along_axis(rtl, nd, axis=1))
+            nd = np.where(isleaf, nd, nxt)
+        # lr * float32 leaves, matching GBTRegressor.fit's dtype exactly
+        pred = pred + learning_rate * np.take_along_axis(V_t, nd, axis=1)
+
+    def grid(a):
+        return a.reshape(C, O, *a.shape[1:])
+
+    return PackedForest(feature=grid(F), threshold=grid(TH), left=grid(LE),
+                        right=grid(RI), value=grid(V), base=grid(base),
+                        bin_edges=edges, n_nodes=grid(NN),
+                        learning_rate=learning_rate, max_depth=max_depth)
 
 
 class LinearRegression:

@@ -3,10 +3,17 @@
 One (ExpDatabase, parameter-predictor) pair per unique configuration
 combination — e.g. (acc, acc_count, back, model, prec, mode).  The key
 columns are configurable; combinations are discovered from the data.
+
+Combination fits are independent, so ``fit`` runs them on a thread pool
+(``n_workers``).  Results are collected per-combination and inserted in
+sorted combo order, and each fit seeds its own RNG, so the registry is
+deterministic regardless of worker count or completion order.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
+from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
@@ -26,22 +33,39 @@ class ComboModel:
 
 
 class ModelRegistry:
-    def __init__(self, keys: Sequence[str] = DEFAULT_KEYS):
+    def __init__(self, keys: Sequence[str] = DEFAULT_KEYS,
+                 n_workers: Optional[int] = None):
         self.keys = tuple(keys)
         self.combos: Dict[Tuple, ComboModel] = {}
+        self.n_workers = n_workers
+
+    @staticmethod
+    def _fit_combo(args) -> ComboModel:
+        workload, gbt_kw = args
+        db = build_exponential_database(*workload)
+        pred = (train_param_predictor(db.training, **gbt_kw)
+                if db is not None and len(db.training) >= 4 else None)
+        return ComboModel(db=db, predictor=pred)
 
     def fit(self, data: Dataset, **gbt_kw) -> "ModelRegistry":
         keys = [k for k in self.keys if k in data.cols]
         self._active_keys = tuple(keys)
-        for combo in data.unique_combos(keys):
+        combos = sorted(data.unique_combos(keys))
+        jobs = []
+        for combo in combos:
             sub = data
             for k, v in zip(keys, combo):
                 sub = sub.mask(sub[k].astype(str) == v)
-            ii, oo, bb, thpt = sub.workload
-            db = build_exponential_database(ii, oo, bb, thpt)
-            pred = (train_param_predictor(db.training, **gbt_kw)
-                    if db is not None and len(db.training) >= 4 else None)
-            self.combos[combo] = ComboModel(db=db, predictor=pred)
+            jobs.append((sub.workload, gbt_kw))
+        workers = self.n_workers or min(8, max(1, (os.cpu_count() or 1)))
+        if workers > 1 and len(jobs) > 1:
+            with ThreadPoolExecutor(max_workers=workers) as ex:
+                fitted = list(ex.map(self._fit_combo, jobs))
+        else:
+            fitted = [self._fit_combo(j) for j in jobs]
+        # insertion in sorted combo order keeps iteration deterministic
+        for combo, cm in zip(combos, fitted):
+            self.combos[combo] = cm
         return self
 
     def _key_of(self, row: Dict) -> Tuple:

@@ -1,4 +1,4 @@
-"""Jit'd public wrapper for the GBT histogram kernel (pads + dispatches)."""
+"""Jit'd public wrappers for the GBT histogram kernel (pads + dispatches)."""
 from __future__ import annotations
 
 import functools
@@ -30,3 +30,26 @@ def build_histograms(bins, grad, hess, n_bins: int, block_f: int = 8,
     out = gbt_hist_kernel(bins, grad, hess, n_bins=n_bins, block_f=bf,
                           block_n=bn, interpret=(mode == "interpret"))
     return out[:f]
+
+
+@functools.partial(jax.jit, static_argnames=("n_nodes", "n_bins", "block_f",
+                                             "block_n", "force"))
+def build_node_histograms(bins, grad, hess, node_id, n_nodes: int,
+                          n_bins: int, block_f: int = 8, block_n: int = 512,
+                          force: str | None = None):
+    """Per-tree-node histograms: (n, f) bins + (n,) node ids ->
+    (n_nodes, f, n_bins, 2).
+
+    TPUs have no atomics, so node separation is zero-masked weights: one
+    kernel pass per node with ``grad * (node_id == node)`` — a
+    zero-weight row adds exactly 0.0 to every bin.  The node loop is
+    unrolled inside this jit, so level-wise GBT growth issues a single
+    XLA call per level instead of ``n_nodes`` host round trips.
+    """
+    outs = []
+    for li in range(n_nodes):
+        m = (node_id == li).astype(grad.dtype)
+        outs.append(build_histograms(bins, grad * m, hess * m,
+                                     n_bins=n_bins, block_f=block_f,
+                                     block_n=block_n, force=force))
+    return jnp.stack(outs)

@@ -1,0 +1,41 @@
+"""Optional-``hypothesis`` shim for the property tests.
+
+``hypothesis`` is a dev-only dependency (see requirements-dev.txt).
+When it is installed, this module re-exports the real ``given`` /
+``settings`` / ``st``.  When it is missing, the decorators degrade to
+no-ops whose test bodies call ``pytest.importorskip("hypothesis")`` —
+so property tests skip with a clear reason instead of failing the whole
+module at collection, and every non-property test still runs.
+"""
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stand-in for ``hypothesis.strategies``: every strategy call
+        returns None; the values are never used because the decorated
+        test skips before its body runs."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            def _skipped_property_test():
+                pytest.importorskip("hypothesis")
+
+            _skipped_property_test.__name__ = fn.__name__
+            _skipped_property_test.__doc__ = fn.__doc__
+            return _skipped_property_test
+        return deco

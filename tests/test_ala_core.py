@@ -2,7 +2,7 @@
 uncertainty — unit + property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.ala import ALA, ALAConfig
 from repro.core.annealing import SAConfig, anneal, evaluate_subset, median_ape

@@ -1,7 +1,7 @@
 """Perf simulator + dataset + registry behaviour tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import get_config
 from repro.core.dataset import Dataset

@@ -1,0 +1,272 @@
+"""Batched annealing engine: evaluator parity with the serial path,
+packed-GBT jax/numpy equivalence, and registry parallel-fit determinism."""
+import numpy as np
+import pytest
+
+from repro.core.annealing import (SAConfig, _BatchedEvaluator, anneal,
+                                  anneal_batched, evaluate_subset)
+from repro.core.database import build_group_structure
+from repro.core.error_predictor import train_error_predictor
+from repro.core.expmodel import exp_model, initial_params
+from repro.core.fit import fit_exponential_groups, fit_exponential_masked
+from repro.core.gbt import (GBTRegressor, MultiOutputGBT, fit_packed_forest,
+                            kernel_histograms, pack_models)
+
+
+# ----------------------------------------------------------------- helpers --
+def _toy_workload(seed=0, noise=0.02):
+    rng = np.random.default_rng(seed)
+    iis, oos = [128, 512, 2048], [128, 1024]
+    bbs = np.array([1, 2, 4, 8, 16, 32, 64, 128], float)
+    rows = []
+    for ii in iis:
+        for oo in oos:
+            c = 2e4 / np.log2(ii + oo)
+            y = exp_model(bbs, 0.9 * c, 0.03, c)
+            y = y * rng.lognormal(0, noise, len(bbs))
+            rows += [(ii, oo, bb, t) for bb, t in zip(bbs, y)]
+    arr = np.asarray(rows, float)
+    return arr[:, 0], arr[:, 1], arr[:, 2], arr[:, 3]
+
+
+def _split_toy(seed=0):
+    ii, oo, bb, thpt = _toy_workload(seed=seed)
+    rng = np.random.default_rng(seed)
+    m = rng.random(len(ii)) < 0.5
+    return (ii[m], oo[m], bb[m], thpt[m]), \
+        (ii[~m], oo[~m], bb[~m], thpt[~m])
+
+
+GBT_KW = dict(n_estimators=20, learning_rate=0.2, max_depth=3)
+
+
+# ---------------------------------------------------------- eval parity -----
+def test_batched_evaluator_matches_serial_eval():
+    train, test = _split_toy()
+    ev = _BatchedEvaluator(train, test, GBT_KW, n_slots=3)
+    subs = [
+        {"ii": frozenset(np.unique(train[0]).tolist()),
+         "oo": frozenset(np.unique(train[1]).tolist()),
+         "bb": frozenset(np.unique(train[2]).tolist())},
+        {"ii": frozenset([128.0, 512.0]),
+         "oo": frozenset([128.0, 1024.0]),
+         "bb": frozenset([1.0, 4.0, 16.0, 64.0, 128.0])},
+        {"ii": frozenset([128.0]), "oo": frozenset([128.0]),
+         "bb": frozenset([1.0, 2.0])},          # degenerate -> 100.0
+    ]
+    batched = ev.evaluate_batch(subs)
+    for s, e in zip(subs, batched):
+        serial = evaluate_subset(train, test, s, GBT_KW)
+        # identical pipeline; small float32 padding noise in the LM solve
+        assert e == pytest.approx(serial, rel=0.05, abs=0.5), (s, e, serial)
+
+
+def test_batched_anneal_reaches_legacy_best():
+    """Equal proposal budget, fixed seed: the K-chain engine must find a
+    subset at least as good as the serial loop's."""
+    train, test = _split_toy()
+    legacy = anneal(train, test, SAConfig(n_iters=20, seed=0,
+                                          gbt_kw=GBT_KW))
+    batched = anneal_batched(train, test,
+                             SAConfig(n_iters=10, seed=0, gbt_kw=GBT_KW,
+                                      n_chains=2))
+    assert batched.best_error <= legacy.best_error + 1e-6
+    assert all(np.isfinite(batched.errors))
+    # global best really is the minimum of the log
+    assert batched.best_error == pytest.approx(min(batched.errors))
+
+
+def test_batched_log_feeds_error_predictor():
+    train, test = _split_toy()
+    log = anneal_batched(train, test,
+                         SAConfig(n_iters=8, seed=1, gbt_kw=GBT_KW,
+                                  n_chains=3))
+    # chains + anchor + n_iters * n_chains entries, Alg 7 trains on them
+    assert len(log.errors) == 3 + 1 + 8 * 3
+    model = train_error_predictor(log, n_estimators=40)
+    assert np.isfinite(model.predict(
+        np.zeros((1, sum(len(u) for u in log.universes.values()))))).all()
+
+
+def test_batched_engine_accepts_sampling_gbt_kw():
+    """gbt_kw options the serial engine accepts (subsample/colsample/
+    seed) must not crash the batched engine — they drop to the
+    per-candidate fallback trainer."""
+    train, test = _split_toy()
+    kw = dict(GBT_KW, subsample=0.8, seed=3)
+    log = anneal_batched(train, test,
+                         SAConfig(n_iters=3, seed=0, gbt_kw=kw,
+                                  n_chains=2))
+    assert all(np.isfinite(log.errors))
+    serial = evaluate_subset(train, test, log.best_subset, kw)
+    assert log.best_error == pytest.approx(serial, rel=0.05, abs=0.5)
+
+
+def test_evaluation_cache_dedupes(monkeypatch):
+    train, test = _split_toy()
+    cfg = SAConfig(n_iters=10, seed=3, gbt_kw=GBT_KW, n_chains=2)
+    ev = _BatchedEvaluator(train, test, cfg.gbt_kw, n_slots=3)
+    calls = []
+    orig = ev.evaluate_batch
+
+    def counting(subsets):
+        calls.append(len(subsets))
+        return orig(subsets)
+
+    monkeypatch.setattr(ev, "evaluate_batch", counting)
+    log = anneal_batched(train, test, cfg, evaluator=ev)
+    assert sum(calls) < len(log.errors)      # cache hits happened
+
+
+# ----------------------------------------------------- masked LM parity -----
+def test_fit_exponential_masked_matches_groups():
+    rng = np.random.default_rng(0)
+    G, maxn = 6, 9
+    X = np.zeros((G, maxn))
+    Y = np.zeros((G, maxn))
+    W = np.zeros((G, maxn))
+    groups = []
+    for g in range(G):
+        n = rng.integers(5, maxn + 1)
+        bb = np.sort(rng.choice([1, 2, 4, 8, 16, 32, 64, 128, 256],
+                                size=n, replace=False)).astype(float)
+        a, b, c = 100 * (g + 1), 0.02 * (g + 1), 600 * (g + 2)
+        y = exp_model(bb, a, b, c)
+        X[g, :n] = bb
+        Y[g, :n] = y
+        W[g, :n] = 1.0
+        groups.append((bb, y, initial_params(bb, y)))
+    theta_m = fit_exponential_masked(
+        np.stack([g[2] for g in groups]), X, Y, W)
+    theta_g = fit_exponential_groups(groups)
+    for g in range(G):
+        bb = groups[g][0]
+        np.testing.assert_allclose(exp_model(bb, *theta_m[g]),
+                                   exp_model(bb, *theta_g[g]), rtol=1e-3)
+
+
+def test_group_structure_covers_rows():
+    ii, oo, bb, thpt = _toy_workload()
+    gs = build_group_structure(ii, oo, bb, thpt)
+    assert len(gs) == 6
+    assert gs.row_w.sum() == len(ii)
+    # padded rows reproduce the original data per group
+    g = 2
+    real = gs.row_w[g] > 0
+    key = gs.keys[g]
+    rows = (ii == key[0]) & (oo == key[1])
+    np.testing.assert_array_equal(np.sort(gs.bb[g, real]), np.sort(bb[rows]))
+
+
+# ------------------------------------------------- packed GBT inference -----
+def test_gbt_jax_backend_matches_numpy():
+    rng = np.random.default_rng(0)
+    X = rng.uniform(0, 10, size=(300, 5))
+    y = 2 * X[:, 0] + np.sin(X[:, 1]) * 3 + X[:, 2]
+    m = GBTRegressor(n_estimators=40, learning_rate=0.1, max_depth=4)
+    m.fit(X[:200], y[:200])
+    p_np = m.predict(X[200:])
+    p_jax = m.predict(X[200:], backend="jax")
+    np.testing.assert_allclose(p_jax, p_np, rtol=1e-5, atol=1e-5)
+
+
+def test_packed_forest_backends_agree():
+    rng = np.random.default_rng(1)
+    X = rng.uniform(0, 5, size=(120, 4))
+    Y = np.stack([X[:, 0] ** 2, X @ np.ones(4)], axis=1)
+    mo = MultiOutputGBT(2, n_estimators=15, learning_rate=0.2).fit(X, Y)
+    pf = pack_models([list(mo.models)])
+    q = rng.uniform(0, 5, size=(1, 50, 4))
+    np.testing.assert_allclose(pf.predict(q, backend="jax"),
+                               pf.predict(q, backend="numpy"),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(pf.predict(q, backend="numpy")[0],
+                               mo.predict(q[0]), rtol=1e-5, atol=1e-5)
+
+
+def test_joint_multioutput_fit_identical_to_sequential():
+    rng = np.random.default_rng(2)
+    X = rng.uniform(0, 10, size=(60, 6))
+    Y = np.stack([X[:, 0] * 2, np.sin(X[:, 1]), X[:, 2] - X[:, 3]], axis=1)
+    kw = dict(n_estimators=12, learning_rate=0.15, max_depth=4)
+    seq = MultiOutputGBT(3, **kw).fit(X, Y, joint=False)
+    joint = MultiOutputGBT(3, **kw).fit(X, Y, joint=True)
+    q = rng.uniform(0, 10, size=(80, 6))
+    np.testing.assert_array_equal(seq.predict(q), joint.predict(q))
+
+
+def test_masked_packed_fit_equals_subset_fit():
+    """Zero row weights must reproduce training on the filtered rows."""
+    rng = np.random.default_rng(3)
+    X = rng.uniform(0, 10, size=(50, 5))
+    Y = np.stack([X[:, 0] + X[:, 1], X[:, 2] ** 1.5], axis=1)
+    W = np.ones((1, 50))
+    W[0, ::4] = 0.0
+    kw = dict(n_estimators=10, learning_rate=0.2, max_depth=3)
+    pf = fit_packed_forest(X[None], Y[None], W, **kw)
+    keep = W[0] > 0
+    ref = MultiOutputGBT(2, **kw).fit(X[keep], Y[keep], joint=False)
+    q = rng.uniform(0, 10, size=(40, 5))
+    np.testing.assert_allclose(pf.predict(q[None], backend="numpy")[0],
+                               ref.predict(q), rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_histogram_route_matches_scatter_add():
+    rng = np.random.default_rng(4)
+    bins = rng.integers(0, 16, size=(96, 3)).astype(np.int32)
+    grad = rng.normal(size=96)
+    hess = np.abs(rng.normal(size=96))
+    node = rng.integers(0, 4, size=96)
+    hist = np.zeros((4, 3, 16, 2))
+    fidx = np.broadcast_to(np.arange(3)[None, :], bins.shape)
+    nidx = np.broadcast_to(node[:, None], bins.shape)
+    np.add.at(hist, (nidx, fidx, bins, 0),
+              np.broadcast_to(grad[:, None], bins.shape))
+    np.add.at(hist, (nidx, fidx, bins, 1),
+              np.broadcast_to(hess[:, None], bins.shape))
+    for force in (None, "interpret"):
+        hk = kernel_histograms(bins, grad, hess, node, 4, 16, force=force)
+        np.testing.assert_allclose(hk, hist, atol=1e-4)
+
+
+def test_gbt_use_kernel_fit_close_to_reference():
+    rng = np.random.default_rng(5)
+    X = rng.uniform(0, 10, size=(200, 4))
+    y = X[:, 0] * 3 + X[:, 1]
+    kw = dict(n_estimators=8, max_depth=3, n_bins=16)
+    a = GBTRegressor(**kw).fit(X, y).predict(X)
+    b = GBTRegressor(use_kernel=True, **kw).fit(X, y).predict(X)
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+
+
+# ------------------------------------------------- registry determinism -----
+def test_registry_parallel_fit_deterministic():
+    from repro.core.dataset import Dataset
+    from repro.core.registry import ModelRegistry
+    rng = np.random.default_rng(0)
+    rows = []
+    for model in ("a", "b"):
+        for back in ("x", "y"):
+            for ii in (128.0, 512.0):
+                for oo in (128.0, 1024.0):
+                    c = rng.uniform(2e3, 2e4)
+                    for bb in (1.0, 4.0, 16.0, 64.0):
+                        rows.append((model, back, ii, oo, bb,
+                                     c - 0.9 * c * np.exp(-0.05 * bb)))
+    cols = {
+        "model": np.array([r[0] for r in rows]),
+        "back": np.array([r[1] for r in rows]),
+        "ii": np.array([r[2] for r in rows]),
+        "oo": np.array([r[3] for r in rows]),
+        "bb": np.array([r[4] for r in rows]),
+        "thpt": np.array([r[5] for r in rows]),
+    }
+    data = Dataset(cols)
+    kw = dict(n_estimators=10, learning_rate=0.2)
+    serial = ModelRegistry(keys=("model", "back"), n_workers=1) \
+        .fit(data, **kw)
+    parallel = ModelRegistry(keys=("model", "back"), n_workers=4) \
+        .fit(data, **kw)
+    assert list(serial.combos) == list(parallel.combos)
+    np.testing.assert_array_equal(serial.predict(data),
+                                  parallel.predict(data))
