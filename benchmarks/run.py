@@ -17,6 +17,9 @@ writes a JSON report to results/bench_report.json for EXPERIMENTS.md.
   perf_kernels            — kernel oracle timings (CPU reference path)
   sa_engine               — legacy serial SA vs the batched K-chain engine
                             (equal proposal budget; emits BENCH_sa.json)
+  uncertainty_engine      — serial Alg 7+8 loop vs the batched SubsetBank
+                            kernel at equal query count (>= 64 queries x
+                            200 subsets; emits BENCH_uncertainty.json)
 
 Run everything:          PYTHONPATH=src python benchmarks/run.py
 Run one benchmark:       PYTHONPATH=src python benchmarks/run.py sa_engine
@@ -359,6 +362,74 @@ def sa_engine(n_proposals: int = 60, n_chains: int = 4):
     return out
 
 
+def uncertainty_engine(n_queries: int = 64, n_subsets: int = 200,
+                       n_chains: int = 4):
+    """Serial Alg 7+8 (one query at a time through the numpy reference)
+    vs the batched engine (whole fleet through the jitted PackedForest
+    + SubsetBank kernel) at equal query count.  The two paths share the
+    fixed-bin contract, so results must agree to <= 1e-6.  Writes
+    results/BENCH_uncertainty.json."""
+    from repro.core.ala import ALA
+    from repro.core.annealing import SAConfig
+    ds, (train, test) = _data()
+
+    # an SA log with >= n_subsets entries (chains + anchor + K*iters)
+    n_iters = -(-(n_subsets - n_chains - 1) // n_chains)
+    ala = ALA()
+    ala.cfg.sa = SAConfig(n_iters=n_iters, seed=0, n_chains=n_chains,
+                          gbt_kw=dict(n_estimators=30, learning_rate=0.2,
+                                      max_depth=4))
+    ala.fit(*train.workload)
+    ala.explore(test.workload)
+    ala.fit_error()
+    bank = ala.bank(max_subsets=n_subsets)
+
+    # fleet of query workloads: random row-subsets of the held-out split
+    rng = np.random.default_rng(0)
+    tw = test.workload
+    queries = []
+    for _ in range(n_queries):
+        m = rng.random(len(tw[0])) < 0.6
+        if m.sum() < 2:
+            m[:2] = True
+        queries.append(tuple(v[m] for v in tw))
+
+    ala.estimate_batch(queries)     # warm up the two jitted shapes once
+    (eb, db_, cb), us_b = _timed(ala.estimate_batch, queries)
+
+    def serial():
+        es, dss, cs = [], [], []
+        for q in queries:
+            e, d, c = ala.estimate_batch([q], backend="numpy")
+            es.append(e[0]), dss.append(d[0]), cs.append(c[0])
+        return np.asarray(es), np.asarray(dss), np.asarray(cs)
+
+    (es, ds_, cs), us_s = _timed(serial)
+
+    speedup = us_s / max(us_b, 1e-9)
+    max_diff = float(max(np.abs(eb - es).max(), np.abs(db_ - ds_).max(),
+                         np.abs(cb - cs).max()))
+    out = {
+        "n_queries": n_queries,
+        "n_subsets": int(bank.n_subsets),
+        "n_valid_subsets": int(bank.valid.sum()),
+        "serial": {"wall_s": us_s / 1e6},
+        "batched": {"wall_s": us_b / 1e6},
+        "speedup": speedup,
+        "max_abs_diff": max_diff,
+        "parity_ok": bool(max_diff <= 1e-6),
+        "confidence_range": [float(cb.min()), float(cb.max())],
+        "predicted_error_range": [float(eb.min()), float(eb.max())],
+    }
+    REPORT["uncertainty_engine"] = out
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / "BENCH_uncertainty.json").write_text(json.dumps(out, indent=1))
+    _emit("uncertainty_engine_serial", us_s, f"queries={n_queries}")
+    _emit("uncertainty_engine_batched", us_b,
+          f"speedup={speedup:.1f}x;max_abs_diff={max_diff:.2e}")
+    return out
+
+
 BENCHMARKS = {}
 
 
@@ -398,6 +469,7 @@ BENCHMARKS.update({
     "perf_vmapped_fit": perf_vmapped_fit,
     "perf_kernels": perf_kernels,
     "sa_engine": sa_engine,
+    "uncertainty_engine": uncertainty_engine,
 })
 
 

@@ -5,6 +5,8 @@
     explore      -> Alg 6 (simulated annealing over training subsets)
     fit_error    -> Alg 7 (error predictor on SA logs)
     estimate     -> Alg 8 (predicted error + histogram-cosine confidence)
+    estimate_batch -> Alg 7+8 over many query workloads in one shot
+                      (jitted PackedForest + SubsetBank distance kernel)
 
 ``Registry``-level (Alg 4) training over hardware/software combinations
 lives in repro.core.registry; this class operates within one combination.
@@ -13,18 +15,19 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core import annealing
 from repro.core.annealing import SAConfig, SALog, Subset, median_ape
 from repro.core.database import ExpDatabase, build_exponential_database
-from repro.core.error_predictor import (encode_subset, predict_error,
-                                        train_error_predictor)
+from repro.core.error_predictor import predict_error, train_error_predictor
 from repro.core.gbt import GBTRegressor, MultiOutputGBT
 from repro.core.predictor import predict_throughput, train_param_predictor
-from repro.core.uncertainty import confidence as _confidence
+from repro.core import uncertainty
+from repro.core.uncertainty import (SubsetBank, bank_confidence,
+                                    build_subset_bank)
 
 
 @dataclasses.dataclass
@@ -42,6 +45,8 @@ class ALA:
         self.sa_log: Optional[SALog] = None
         self.error_model: Optional[GBTRegressor] = None
         self._train = None
+        self._bank: Optional[SubsetBank] = None
+        self._bank_subsets: Optional[int] = None
         self.timings: Dict[str, float] = {}
 
     # -- Alg 2 + Alg 3 -------------------------------------------------------
@@ -49,6 +54,7 @@ class ALA:
         t0 = time.perf_counter()
         self._train = (np.asarray(ii, np.float64), np.asarray(oo, np.float64),
                        np.asarray(bb, np.float64), np.asarray(thpt, np.float64))
+        self._bank = None                      # new train -> stale bank
         self.db = build_exponential_database(*self._train)
         t1 = time.perf_counter()
         self.predictor = (train_param_predictor(self.db.training,
@@ -83,6 +89,7 @@ class ALA:
         else:
             self.sa_log = annealing.anneal(self._train, test, self.cfg.sa,
                                            initial=initial, on_iter=on_iter)
+        self._bank = None                      # new log -> stale bank
         self.timings["explore_s"] = time.perf_counter() - t0
         return self.sa_log
 
@@ -95,24 +102,69 @@ class ALA:
         return self.error_model
 
     # -- Alg 8 ----------------------------------------------------------------
+    def bank(self, max_subsets: Optional[int] = None) -> SubsetBank:
+        """The SA log materialized for batched Alg 8 (built lazily after
+        ``explore()``, cached until the log changes).
+
+        ``max_subsets=None`` reuses whatever bank is cached (building
+        one over the trailing ``DEFAULT_MAX_SUBSETS`` window — the same
+        cap the serial ``confidence`` applies — if none is); an explicit
+        value rebuilds when the cached bank used a different window."""
+        assert self.sa_log is not None, "explore() first"
+        if self._bank is None or (max_subsets is not None
+                                  and self._bank_subsets != max_subsets):
+            self._bank_subsets = (uncertainty.DEFAULT_MAX_SUBSETS
+                                  if max_subsets is None else max_subsets)
+            self._bank = build_subset_bank(self._train, self.sa_log,
+                                           max_subsets=self._bank_subsets)
+        return self._bank
+
+    def _fill_thpt(self, q) -> Tuple[np.ndarray, ...]:
+        """Replace non-finite throughputs with ALA's own predictions —
+        they only enter the confidence histogram when finite."""
+        nii, noo, nbb, nthpt = (np.atleast_1d(np.asarray(v, np.float64))
+                                for v in q)
+        finite = np.isfinite(nthpt)
+        if not finite.all():
+            nthpt = nthpt.copy()
+            nthpt[~finite] = self.predict(nii[~finite], noo[~finite],
+                                          nbb[~finite])
+        return nii, noo, nbb, nthpt
+
+    def _signature(self, q) -> Subset:
+        return {"ii": frozenset(np.unique(q[0]).tolist()),
+                "oo": frozenset(np.unique(q[1]).tolist()),
+                "bb": frozenset(np.unique(q[2]).tolist())}
+
     def estimate(self, new) -> Tuple[float, float]:
         """(predicted error %, confidence) for a new workload dataset.
 
         ``new`` is an (ii, oo, bb, thpt) tuple (thpt may be NaNs when
-        unknown — it only enters the confidence histogram when finite)."""
+        unknown).  Runs the batch-of-one serial reference path; the
+        batched JAX engine (``estimate_batch``) matches it to <= 1e-6.
+        """
+        err, _, conf = self.estimate_batch([new], backend="numpy")
+        return float(err[0]), float(conf[0])
+
+    def estimate_batch(self, queries: Sequence, backend: str = "jax"
+                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Batched Alg 7+8: (err, d_min, confidence) vectors, one entry
+        per query workload.
+
+        Each query is an (ii, oo, bb, thpt) tuple (ragged lengths fine;
+        thpt may contain NaNs).  ``backend="jax"`` runs the whole batch
+        through two jitted calls — encoded signatures through the
+        ``PackedForest`` traversal and the fleet distance kernel over
+        the ``SubsetBank``; ``backend="numpy"`` is the serial reference.
+        Degenerate logs yield the (inf, 0.0) sentinel per query."""
         assert self.error_model is not None and self.sa_log is not None
-        nii, noo, nbb, nthpt = (np.asarray(v, np.float64) for v in new)
-        sig: Subset = {"ii": frozenset(np.unique(nii).tolist()),
-                       "oo": frozenset(np.unique(noo).tolist()),
-                       "bb": frozenset(np.unique(nbb).tolist())}
-        err = float(predict_error(self.error_model, [sig],
-                                  self.sa_log.universes)[0])
-        finite = np.isfinite(nthpt)
-        if not finite.all():
-            # fill unknown thpt with ALA's own predictions for the histogram
-            pred = self.predict(nii[~finite], noo[~finite], nbb[~finite])
-            nthpt = nthpt.copy()
-            nthpt[~finite] = pred
-        _, conf = _confidence(self._train, self.sa_log,
-                              (nii, noo, nbb, nthpt))
-        return err, conf
+        t0 = time.perf_counter()
+        queries = [tuple(np.atleast_1d(np.asarray(v, np.float64))
+                         for v in q) for q in queries]
+        sigs = [self._signature(q) for q in queries]
+        err = predict_error(self.error_model, sigs, self.sa_log.universes,
+                            backend=backend) if sigs else np.zeros(0)
+        filled = [self._fill_thpt(q) for q in queries]
+        d_min, conf = bank_confidence(self.bank(), filled, backend=backend)
+        self.timings["estimate_batch_s"] = time.perf_counter() - t0
+        return np.asarray(err, np.float64), d_min, conf

@@ -56,6 +56,11 @@ class SALog:
     best_subset: Subset
     best_error: float
 
+    def subset_masks(self, ii, oo, bb) -> np.ndarray:
+        """(S, n) row masks of every logged subset over the given rows
+        (vectorized; the raw material for Alg 8's ``SubsetBank``)."""
+        return batch_subset_masks(ii, oo, bb, self.subsets, self.universes)
+
 
 def median_ape(y_true: np.ndarray, y_pred: np.ndarray) -> float:
     """Median absolute percentage error (the paper's headline metric)."""
@@ -68,6 +73,35 @@ def subset_mask(ii, oo, bb, subset: Subset) -> np.ndarray:
     m &= np.isin(oo, list(subset["oo"]))
     m &= np.isin(bb, list(subset["bb"]))
     return m
+
+
+def batch_subset_masks(ii, oo, bb, subsets: Sequence[Subset],
+                       universes: Optional[Dict[str, np.ndarray]] = None
+                       ) -> np.ndarray:
+    """(S, n) row masks for many subsets in one vectorized pass.
+
+    Rows are coded into each dimension's universe once; each subset then
+    contributes three membership bit-vectors, and the mask is a gather +
+    logical-and — no per-subset ``np.isin`` over the rows.  Equals
+    ``np.stack([subset_mask(ii, oo, bb, s) for s in subsets])``.
+    """
+    cols = {"ii": np.asarray(ii), "oo": np.asarray(oo),
+            "bb": np.asarray(bb)}
+    if universes is None:
+        universes = {k: np.unique(v) for k, v in cols.items()}
+    n = len(cols["ii"])
+    out = np.ones((len(subsets), n), bool)
+    for dim, col in cols.items():
+        u = np.asarray(universes[dim])
+        code = np.searchsorted(u, col)
+        code_ok = (code < len(u))
+        codec = np.minimum(code, len(u) - 1)
+        in_universe = code_ok & (u[codec] == col)
+        member = np.zeros((len(subsets), len(u)), bool)
+        for si, s in enumerate(subsets):
+            member[si] = np.isin(u, list(s[dim]))
+        out &= member[:, codec] & in_universe[None, :]
+    return out
 
 
 def evaluate_subset(train, test, subset: Subset,

@@ -3,6 +3,12 @@
 Each logged subset is encoded as a binary membership vector over the
 universal value sets (unique_ii | unique_bb | unique_oo, in the paper's
 order); an XGBoost-style GBT regresses the observed median-APE.
+
+``predict_error(..., backend="jax")`` routes a whole batch of encoded
+signatures through the jitted ``PackedForest`` vmap/gather traversal in
+one call — the path ``ALA.estimate_batch`` uses; the default numpy
+backend stays the serial reference (same trees, same leaves, identical
+up to float summation order).
 """
 from __future__ import annotations
 
@@ -23,8 +29,14 @@ def encode_subset(subset: Subset, universes: Dict[str, np.ndarray]) -> np.ndarra
     return np.concatenate(parts)
 
 
+def encode_subsets(subsets: List[Subset],
+                   universes: Dict[str, np.ndarray]) -> np.ndarray:
+    """(S, D) stacked membership matrix — the batched encoder."""
+    return np.stack([encode_subset(s, universes) for s in subsets])
+
+
 def train_error_predictor(log: SALog, **gbt_kw) -> GBTRegressor:
-    X = np.stack([encode_subset(s, log.universes) for s in log.subsets])
+    X = encode_subsets(log.subsets, log.universes)
     y = np.asarray(log.errors, np.float64)
     kw = dict(n_estimators=200, learning_rate=0.05, max_depth=4, n_bins=4)
     kw.update(gbt_kw)
@@ -34,6 +46,7 @@ def train_error_predictor(log: SALog, **gbt_kw) -> GBTRegressor:
 
 
 def predict_error(model: GBTRegressor, subsets: List[Subset],
-                  universes: Dict[str, np.ndarray]) -> np.ndarray:
-    X = np.stack([encode_subset(s, universes) for s in subsets])
-    return model.predict(X)
+                  universes: Dict[str, np.ndarray],
+                  backend: str = "numpy") -> np.ndarray:
+    X = encode_subsets(subsets, universes)
+    return model.predict(X, backend=backend)

@@ -8,6 +8,12 @@ Combination fits are independent, so ``fit`` runs them on a thread pool
 (``n_workers``).  Results are collected per-combination and inserted in
 sorted combo order, and each fit seeds its own RNG, so the registry is
 deterministic regardless of worker count or completion order.
+
+Fleet-scale uncertainty: ``fit_uncertainty`` runs the full Alg 6+7
+pipeline per combination (its own train/eval split, SA log, error
+predictor, ``SubsetBank``); ``estimate`` then answers Alg 8 for every
+row of a dataset at once — rows group by combination and each group
+dispatches as one batched query to its combination's bank.
 """
 from __future__ import annotations
 
@@ -30,6 +36,9 @@ DEFAULT_KEYS = ("model", "acc", "acc_count", "back", "prec", "mode")
 class ComboModel:
     db: Optional[ExpDatabase]
     predictor: Optional[MultiOutputGBT]
+    # repro.core.ala.ALA after fit_uncertainty (imported lazily there —
+    # plain Alg 4 use keeps registry free of the SA/uncertainty stack)
+    ala: Optional[object] = None
 
 
 class ModelRegistry:
@@ -71,18 +80,82 @@ class ModelRegistry:
     def _key_of(self, row: Dict) -> Tuple:
         return tuple(str(row[k]) for k in self._active_keys)
 
-    def predict(self, data: Dataset) -> np.ndarray:
-        """Throughput prediction for every row (Alg 5 per combination)."""
+    def _combo_masks(self, data: Dataset):
         keys = self._active_keys
-        out = np.zeros(len(data), np.float64)
         arr = np.stack([data[k].astype(str) for k in keys], axis=1) \
             if keys else np.zeros((len(data), 0), str)
-        ii, oo, bb, _ = data.workload
         for combo, cm in self.combos.items():
             mask = np.all(arr == np.asarray(combo), axis=1) if keys else \
                 np.ones(len(data), bool)
+            yield combo, cm, mask
+
+    def predict(self, data: Dataset) -> np.ndarray:
+        """Throughput prediction for every row (Alg 5 per combination)."""
+        out = np.zeros(len(data), np.float64)
+        ii, oo, bb, _ = data.workload
+        for combo, cm, mask in self._combo_masks(data):
             if not mask.any():
                 continue
             out[mask] = predict_throughput(cm.db, cm.predictor,
                                            ii[mask], oo[mask], bb[mask])
         return out
+
+    # -- Alg 6+7 per combination, Alg 8 over whole datasets ------------------
+    def fit_uncertainty(self, data: Dataset, test_frac: float = 0.3,
+                        seed: int = 0, sa_cfg=None,
+                        **gbt_kw) -> "ModelRegistry":
+        """Run the uncertainty pipeline for every fitted combination.
+
+        Each combination's rows split deterministically into an SA
+        train/eval pair; the resulting ALA carries the SA log, the Alg 7
+        error model, and the Alg 8 ``SubsetBank``.  Must follow
+        ``fit``; combinations with too few rows to split are skipped
+        (their rows estimate to the degenerate sentinel).
+        """
+        from repro.core.ala import ALA, ALAConfig
+
+        assert self.combos, "fit() first"
+        for ci, (combo, cm, mask) in enumerate(self._combo_masks(data)):
+            sub = data.mask(mask)
+            if len(sub) < 8:
+                continue
+            # combos iterate in sorted order, so index-seeded RNGs are
+            # deterministic across processes (tuple hash is not)
+            rng = np.random.default_rng(seed + 7919 * (ci + 1))
+            te = rng.random(len(sub)) < test_frac
+            if te.all() or (~te).sum() < 4 or te.sum() < 1:
+                continue
+            cfg = ALAConfig(gbt_kw=dict(gbt_kw) if gbt_kw else
+                            ALAConfig().gbt_kw)
+            if sa_cfg is not None:
+                cfg.sa = sa_cfg
+            ala = ALA(cfg).fit(*sub.mask(~te).workload)
+            ala.explore(sub.mask(te).workload)
+            ala.fit_error()
+            ala.bank()
+            self.combos[combo] = dataclasses.replace(cm, ala=ala)
+        return self
+
+    def estimate(self, data: Dataset, backend: str = "jax"
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Batched Alg 8 for every row: (err, d_min, confidence) arrays
+        aligned to ``data``.
+
+        Rows group by combination; each group is one query workload
+        dispatched to that combination's ``SubsetBank`` through
+        ``ALA.estimate_batch``.  Rows of unknown combinations — or of
+        combinations without an uncertainty fit — get the explicit
+        degenerate sentinel (nan, inf, 0.0).
+        """
+        n = len(data)
+        err = np.full(n, np.nan)
+        d_min = np.full(n, np.inf)
+        conf = np.zeros(n)
+        ii, oo, bb, thpt = data.workload
+        for combo, cm, mask in self._combo_masks(data):
+            if not mask.any() or getattr(cm, "ala", None) is None:
+                continue
+            q = (ii[mask], oo[mask], bb[mask], thpt[mask])
+            e, d, c = cm.ala.estimate_batch([q], backend=backend)
+            err[mask], d_min[mask], conf[mask] = e[0], d[0], c[0]
+        return err, d_min, conf

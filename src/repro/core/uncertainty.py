@@ -1,21 +1,47 @@
-"""Uncertainty quantification (paper Alg 8).
+"""Uncertainty quantification (paper Alg 8) — serial and batched engines.
 
 Confidence c = 1 / (1 + d_min), where d_min is the minimum over logged SA
 subsets of the average per-feature *histogram cosine distance* between the
 new workload's (ii, oo, bb, thpt) distribution and the subset's rows.
 Workload features are histogrammed in log space (they span decades);
-throughput in linear space over the union range.
+throughput in linear space.
+
+Two paths share the metric:
+
+  * ``confidence``      — the original serial loop.  Bin edges are
+    recomputed from the union range of every (query, subset) pair, and
+    each pair re-histograms both row sets.  O(S) pipeline passes per
+    query; fine for one-off estimates.
+  * ``SubsetBank``      — the fleet-scale engine.  Built once per SA
+    log: subset row-masks materialize in one vectorized pass, bin edges
+    are fixed from the training rows, and every subset's per-feature
+    histograms precompute into an (S, 4, B) array.  Queries then run
+    through one jitted JAX kernel (bucketize -> segment-sum histograms
+    -> normalized dot products) that emits the full
+    (n_queries x n_subsets) cosine-distance matrix in a single call.
+    ``bank_distances(..., backend="numpy")`` is the serial float64
+    reference for the same fixed-bin contract; the JAX path matches it
+    to <= 1e-6.  See docs/uncertainty_engine.md.
+
+Degenerate logs (every subset selects < 2 training rows) surface
+explicitly in both paths: d_min = inf, confidence = 0.0 — never the
+misleading mid-scale fallback of pretending d_min = 1.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.annealing import SALog, subset_mask
+from repro.core.annealing import SALog, Subset, batch_subset_masks, subset_mask
 
 N_HIST_BINS = 16
 FEATS = ("ii", "oo", "bb", "thpt")
+MIN_SUBSET_ROWS = 2
+# both engines reduce d_min over the same trailing window of the SA log
+# by default, and it bounds bank memory on long multi-chain runs
+DEFAULT_MAX_SUBSETS = 200
 
 
 def _feature_bins(ref: Dict[str, np.ndarray],
@@ -60,11 +86,16 @@ def workload_distance(ref_rows: Dict[str, np.ndarray],
 
 
 def confidence(train, log: SALog, new,
-               max_subsets: int = 200) -> Tuple[float, float]:
+               max_subsets: int = DEFAULT_MAX_SUBSETS
+               ) -> Tuple[float, float]:
     """Alg 8 lines 4-6: (d_min, confidence) for a new workload.
 
     ``train``/``new`` are (ii, oo, bb, thpt) tuples; logged subsets are
     materialized as row-sets of the training data they selected.
+    Subsets selecting fewer than ``MIN_SUBSET_ROWS`` rows carry no
+    distributional signal and are skipped; when *every* subset is
+    skipped the log is degenerate and the result is the explicit
+    sentinel ``(inf, 0.0)`` — same contract as the batched path.
     """
     ii, oo, bb, thpt = train
     nii, noo, nbb, nthpt = new
@@ -73,11 +104,255 @@ def confidence(train, log: SALog, new,
     d_min = np.inf
     for s in subsets:
         m = subset_mask(ii, oo, bb, s)
-        if m.sum() < 2:
+        if m.sum() < MIN_SUBSET_ROWS:
             continue
         ref_rows = {"ii": ii[m], "oo": oo[m], "bb": bb[m], "thpt": thpt[m]}
         d = workload_distance(ref_rows, new_rows)
         d_min = min(d_min, d)
-    if not np.isfinite(d_min):
-        d_min = 1.0
-    return float(d_min), float(1.0 / (1.0 + d_min))
+    return float(d_min), confidence_from_dmin(d_min)
+
+
+def confidence_from_dmin(d_min: float) -> float:
+    """1 / (1 + d_min), with the degenerate d_min = inf mapping to 0.0."""
+    return float(1.0 / (1.0 + d_min)) if np.isfinite(d_min) else 0.0
+
+
+# ---------------------------------------------------------------------------
+# SubsetBank: fixed-shape histograms + the batched distance kernel
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SubsetBank:
+    """Precomputed fixed-shape state for batched Alg 8 queries.
+
+    Built once per (train, SALog) pair.  The *fixed-bin contract*: bin
+    edges derive from the training rows only (log-space for ii/oo/bb,
+    linear for thpt), values outside the range clip into the boundary
+    bins, and bin *assignment* compares float32 values against float32
+    edges — identically in the serial numpy reference and the jitted
+    kernel, so both paths count the exact same histograms and differ
+    only by float32-vs-float64 rounding in the cosine arithmetic.
+    """
+    inner_edges: np.ndarray     # (4, B-1) float32 bucketize edges
+    hist: np.ndarray            # (S, 4, B) float64 subset count histograms
+    unit: np.ndarray            # (S, 4, B) float32 L2-normalized histograms
+    valid: np.ndarray           # (S,) bool — >= MIN_SUBSET_ROWS rows selected
+    masks: np.ndarray           # (S, n) bool training-row masks
+    subsets: List[Subset]
+    universes: Dict[str, np.ndarray]
+    n_bins: int
+
+    @property
+    def n_subsets(self) -> int:
+        return len(self.subsets)
+
+
+def _bank_edges(train, n_bins: int) -> np.ndarray:
+    """(4, B-1) float32 inner edges: geomspace for ii/oo/bb, linspace
+    for thpt, ranges from the (finite) training rows.
+
+    The two boundary bins are *reserved for out-of-range values*: the
+    training range [lo, hi] splits into the B-2 core bins, the first
+    inner edge sits at lo (side="right" keeps v == lo in the core) and
+    the last one ulp above hi.  Training rows therefore never occupy
+    bins 0 / B-1, so a query far outside the range concentrates in a
+    bin no valid subset has mass in and reads as distant — out-of-range
+    mass is flagged, not silently merged with the training extremes.
+    """
+    cols = dict(zip(FEATS, (np.asarray(v, np.float64) for v in train)))
+    inner = np.empty((len(FEATS), n_bins - 1), np.float32)
+    for fi, f in enumerate(FEATS):
+        v = cols[f][np.isfinite(cols[f])]
+        if f == "thpt":
+            lo = float(v.min()) if len(v) else 0.0
+            hi = float(v.max()) if len(v) else 1.0
+            hi = hi if hi > lo else lo + 1.0
+            core = np.linspace(lo, hi, n_bins - 1)[1:-1]
+        else:
+            lo = max(float(v.min()), 1e-9) if len(v) else 1e-9
+            hi = max(float(v.max()), lo * (1 + 1e-9)) if len(v) else 1.0
+            core = np.geomspace(lo, hi, n_bins - 1)[1:-1]
+        lo32, hi32 = np.float32(lo), np.float32(hi)
+        edges = np.concatenate(
+            [[lo32], core.astype(np.float32),
+             [np.nextafter(hi32, np.float32(np.inf))]])
+        # float32 rounding of near-equal float64 edges must stay sorted
+        inner[fi] = np.maximum.accumulate(edges)
+    return inner
+
+
+def _bucketize(vals: np.ndarray, inner_f32: np.ndarray) -> np.ndarray:
+    """Fixed-bin assignment (float32 compare, clipping out-of-range
+    values into the boundary bins).  Identical semantics to the kernel's
+    jnp.searchsorted."""
+    return np.searchsorted(inner_f32,
+                           np.asarray(vals, np.float32), side="right") \
+        .astype(np.int32)
+
+
+def _count_hist(vals: np.ndarray, inner_f32: np.ndarray,
+                n_bins: int, weights: Optional[np.ndarray] = None
+                ) -> np.ndarray:
+    """Float64 count histogram of the finite values (fixed bins)."""
+    vals = np.asarray(vals, np.float64)
+    finite = np.isfinite(vals)
+    w = finite.astype(np.float64) if weights is None \
+        else finite * np.asarray(weights, np.float64)
+    bins = _bucketize(np.where(finite, vals, 0.0), inner_f32)
+    return np.bincount(bins, w, minlength=n_bins).astype(np.float64)
+
+
+def build_subset_bank(train, log: SALog,
+                      max_subsets: Optional[int] = DEFAULT_MAX_SUBSETS,
+                      n_bins: int = N_HIST_BINS) -> SubsetBank:
+    """Materialize the SA log into fixed-shape arrays, once.
+
+    Row masks come from one vectorized membership pass
+    (``batch_subset_masks``); per-subset histograms are a single
+    (S, n) @ (n, B) matmul per feature (exact integer counts in
+    float64).
+    """
+    ii, oo, bb, thpt = (np.asarray(v, np.float64) for v in train)
+    subsets = list(log.subsets[-max_subsets:] if max_subsets
+                   else log.subsets)
+    masks = batch_subset_masks(ii, oo, bb, subsets, log.universes)
+    inner = _bank_edges((ii, oo, bb, thpt), n_bins)
+
+    S, n = masks.shape
+    hist = np.zeros((S, len(FEATS), n_bins), np.float64)
+    cols = (ii, oo, bb, thpt)
+    masks_f = masks.astype(np.float64)
+    for fi, col in enumerate(cols):
+        finite = np.isfinite(col)
+        bins = _bucketize(np.where(finite, col, 0.0), inner[fi])
+        onehot = np.zeros((n, n_bins), np.float64)
+        onehot[np.arange(n)[finite], bins[finite]] = 1.0
+        hist[:, fi, :] = masks_f @ onehot
+
+    nrm = np.linalg.norm(hist, axis=2, keepdims=True)
+    unit = (hist / np.maximum(nrm, 1e-30)).astype(np.float32)
+    valid = masks.sum(axis=1) >= MIN_SUBSET_ROWS
+    return SubsetBank(inner_edges=inner, hist=hist, unit=unit, valid=valid,
+                      masks=masks, subsets=subsets,
+                      universes={k: np.asarray(v)
+                                 for k, v in log.universes.items()},
+                      n_bins=n_bins)
+
+
+def _pad_pow2(x: int, lo: int) -> int:
+    return max(lo, 1 << int(np.ceil(np.log2(max(x, 1)))))
+
+
+def _make_bank_kernel():
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def kernel(q_vals, q_valid, inner_edges, s_unit):
+        """(Q, F, L) padded query values + (Q, F, L) validity masks +
+        (F, B-1) edges + (S, F, B) unit subset histograms
+        -> (Q, S) mean per-feature cosine distances.
+
+        bucketize (searchsorted) -> segment-sum count histograms ->
+        L2-normalize -> one einsum of normalized dot products.
+        """
+        Q, F, L = q_vals.shape
+        B = s_unit.shape[-1]
+        bins = jnp.stack(
+            [jnp.searchsorted(inner_edges[f], q_vals[:, f, :], side="right")
+             for f in range(F)], axis=1)                       # (Q, F, L)
+        flat = ((jnp.arange(Q)[:, None, None] * F
+                 + jnp.arange(F)[None, :, None]) * B + bins)
+        counts = jax.ops.segment_sum(
+            q_valid.astype(jnp.float32).ravel(), flat.ravel(),
+            num_segments=Q * F * B).reshape(Q, F, B)
+        nrm = jnp.sqrt((counts * counts).sum(axis=-1, keepdims=True))
+        unit = counts / jnp.maximum(nrm, 1e-30)
+        sim = jnp.einsum("qfb,sfb->qsf", unit, s_unit)
+        return (1.0 - sim).mean(axis=-1)                       # (Q, S)
+
+    return kernel
+
+
+class _LazyBankKernel:
+    """Defer jax import/compile until the jax backend is first used."""
+
+    def __init__(self):
+        self._fn = None
+
+    def __call__(self, *args):
+        if self._fn is None:
+            self._fn = _make_bank_kernel()
+        return self._fn(*args)
+
+
+_bank_kernel = _LazyBankKernel()
+
+
+def _pack_queries(queries: Sequence) -> Tuple[np.ndarray, np.ndarray]:
+    """Ragged (ii, oo, bb, thpt) query tuples -> fixed (Qp, 4, Lp)
+    float32 values + validity masks, padded to powers of two so the
+    jitted kernel compiles O(log Q * log L) shapes per process."""
+    lens = [len(np.atleast_1d(q[0])) for q in queries]
+    Lp = _pad_pow2(max(lens, default=1), 8)
+    Qp = _pad_pow2(len(queries), 4)
+    vals = np.zeros((Qp, len(FEATS), Lp), np.float32)
+    valid = np.zeros((Qp, len(FEATS), Lp), bool)
+    for qi, q in enumerate(queries):
+        for fi in range(len(FEATS)):
+            col = np.atleast_1d(np.asarray(q[fi], np.float64))
+            finite = np.isfinite(col)
+            vals[qi, fi, :len(col)] = np.where(finite, col, 0.0)
+            valid[qi, fi, :len(col)] = finite
+    return vals, valid
+
+
+def bank_distances(bank: SubsetBank, queries: Sequence,
+                   backend: str = "jax") -> np.ndarray:
+    """Full (n_queries, n_subsets) cosine-distance matrix.
+
+    ``backend="jax"`` runs the jitted kernel in one call;
+    ``backend="numpy"`` is the serial float64 reference (loops every
+    (query, subset) pair) that the kernel must match to <= 1e-6.
+    Invalid subsets (< MIN_SUBSET_ROWS rows) still get columns — mask
+    with ``bank.valid`` before reducing (``bank_confidence`` does).
+    """
+    Q, S = len(queries), bank.n_subsets
+    if Q == 0:
+        return np.zeros((0, S))
+    if backend == "jax":
+        vals, valid = _pack_queries(queries)
+        D = np.asarray(_bank_kernel(vals, valid, bank.inner_edges,
+                                    bank.unit), np.float64)
+        return D[:Q]
+    D = np.empty((Q, S), np.float64)
+    for qi, q in enumerate(queries):
+        qh = np.stack([_count_hist(np.atleast_1d(q[fi]), bank.inner_edges[fi],
+                                   bank.n_bins)
+                       for fi in range(len(FEATS))])           # (4, B)
+        for si in range(S):
+            D[qi, si] = np.mean([_cosine_distance(qh[fi], bank.hist[si, fi])
+                                 for fi in range(len(FEATS))])
+    return D
+
+
+def bank_confidence(bank: SubsetBank, queries: Sequence,
+                    backend: str = "jax"
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """(d_min, confidence) vectors over queries; degenerate banks (no
+    valid subset) yield the explicit (inf, 0.0) sentinel per query."""
+    D = bank_distances(bank, queries, backend=backend)
+    return dmin_confidence(D, bank.valid)
+
+
+def dmin_confidence(D: np.ndarray, valid: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Reduce a (Q, S) distance matrix over the valid subsets."""
+    Q = D.shape[0]
+    Dv = D[:, np.asarray(valid, bool)]
+    if Dv.shape[1] == 0:
+        d_min = np.full(Q, np.inf)
+    else:
+        d_min = Dv.min(axis=1)
+    conf = np.where(np.isfinite(d_min), 1.0 / (1.0 + d_min), 0.0)
+    return d_min, conf

@@ -1,0 +1,32 @@
+"""JAX version-compat shims for the distributed layer.
+
+The public ``shard_map`` moved twice across JAX releases: old versions
+only ship ``jax.experimental.shard_map.shard_map`` (whose replication
+check is spelled ``check_rep``); newer ones export ``jax.shard_map``
+(spelled ``check_vma``).  Every call site goes through this wrapper so
+the rest of the codebase can target the modern signature.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` when available, else the experimental fallback
+    (translating ``check_vma`` to the legacy ``check_rep`` keyword)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=check_vma)
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` returns a per-device list on older
+    JAX and a flat dict on newer — normalize to a dict either way."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost) if cost else {}

@@ -83,7 +83,8 @@ step, in_sh, out_sh, args = build_step(model, policy, shape)
 with use_policy(policy):
     compiled = jax.jit(step, in_shardings=in_sh,
                        out_shardings=out_sh).lower(*args).compile()
-print("CP_COMPILE_OK", compiled.cost_analysis().get("flops"))
+from repro.distributed.compat import cost_analysis_dict
+print("CP_COMPILE_OK", cost_analysis_dict(compiled).get("flops"))
 """
 
 

@@ -1,0 +1,274 @@
+"""Batched uncertainty engine (Alg 7+8): serial-reference parity of the
+SubsetBank kernel, batch-of-one equivalence, degenerate-subset and
+all-NaN-throughput edge cases, and registry-level dispatch."""
+import numpy as np
+import pytest
+
+from repro.core.ala import ALA
+from repro.core.annealing import (SAConfig, SALog, batch_subset_masks,
+                                  subset_mask)
+from repro.core.error_predictor import predict_error
+from repro.core.expmodel import exp_model
+from repro.core.uncertainty import (MIN_SUBSET_ROWS, bank_confidence,
+                                    bank_distances, build_subset_bank,
+                                    confidence, dmin_confidence)
+
+PARITY = 1e-6
+GBT_KW = dict(n_estimators=15, learning_rate=0.2, max_depth=3)
+
+
+# ----------------------------------------------------------------- helpers --
+def _toy_workload(seed=0, noise=0.02):
+    rng = np.random.default_rng(seed)
+    rows = []
+    for ii in (128, 512, 2048):
+        for oo in (128, 1024):
+            c = 2e4 / np.log2(ii + oo)
+            bbs = np.array([1, 2, 4, 8, 16, 32, 64, 128], float)
+            y = exp_model(bbs, 0.9 * c, 0.03, c)
+            y = y * rng.lognormal(0, noise, len(bbs))
+            rows += [(ii, oo, bb, t) for bb, t in zip(bbs, y)]
+    arr = np.asarray(rows, float)
+    return arr[:, 0], arr[:, 1], arr[:, 2], arr[:, 3]
+
+
+def _split_toy(seed=0):
+    ii, oo, bb, thpt = _toy_workload(seed=seed)
+    rng = np.random.default_rng(seed)
+    m = rng.random(len(ii)) < 0.5
+    return (ii[m], oo[m], bb[m], thpt[m]), \
+        (ii[~m], oo[~m], bb[~m], thpt[~m])
+
+
+@pytest.fixture(scope="module")
+def fitted_ala():
+    train, test = _split_toy()
+    ala = ALA()
+    ala.cfg.sa = SAConfig(n_iters=8, seed=0, n_chains=2, gbt_kw=GBT_KW)
+    ala.fit(*train)
+    ala.explore(test)
+    ala.fit_error()
+    return ala, train, test
+
+
+def _queries(test, n=12, seed=3):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n):
+        m = rng.random(len(test[0])) < 0.6
+        if m.sum() < 2:
+            m[:2] = True
+        out.append(tuple(v[m] for v in test))
+    return out
+
+
+# ----------------------------------------------------- masks / bank build --
+def test_batch_subset_masks_match_serial():
+    train, _ = _split_toy()
+    ala_log_subsets = [
+        {"ii": frozenset([128.0, 512.0]), "oo": frozenset([128.0]),
+         "bb": frozenset([1.0, 4.0, 16.0])},
+        {"ii": frozenset([2048.0]), "oo": frozenset([128.0, 1024.0]),
+         "bb": frozenset([2.0, 8.0])},
+        {"ii": frozenset([128.0, 512.0, 2048.0]),
+         "oo": frozenset([128.0, 1024.0]),
+         "bb": frozenset([1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0])},
+    ]
+    ii, oo, bb, _ = train
+    got = batch_subset_masks(ii, oo, bb, ala_log_subsets)
+    ref = np.stack([subset_mask(ii, oo, bb, s) for s in ala_log_subsets])
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_bank_histograms_count_subset_rows(fitted_ala):
+    ala, train, _ = fitted_ala
+    bank = ala.bank()
+    masks = np.stack([subset_mask(*train[:3], s) for s in bank.subsets])
+    np.testing.assert_array_equal(bank.masks, masks)
+    # each feature histogram sums to the subset's row count
+    np.testing.assert_allclose(bank.hist.sum(axis=2),
+                               np.repeat(masks.sum(axis=1)[:, None], 4,
+                                         axis=1))
+    np.testing.assert_array_equal(
+        bank.valid, masks.sum(axis=1) >= MIN_SUBSET_ROWS)
+
+
+# ------------------------------------------------------- numerical parity --
+def test_distance_matrix_jax_matches_serial(fitted_ala):
+    ala, _, test = fitted_ala
+    bank = ala.bank()
+    qs = _queries(test)
+    D_np = bank_distances(bank, qs, backend="numpy")
+    D_jx = bank_distances(bank, qs, backend="jax")
+    assert D_np.shape == (len(qs), bank.n_subsets)
+    np.testing.assert_allclose(D_jx, D_np, atol=PARITY, rtol=0)
+
+
+def test_estimate_batch_parity_on_err_dmin_conf(fitted_ala):
+    ala, _, test = fitted_ala
+    qs = _queries(test)
+    err_j, dmin_j, conf_j = ala.estimate_batch(qs, backend="jax")
+    err_n, dmin_n, conf_n = ala.estimate_batch(qs, backend="numpy")
+    np.testing.assert_allclose(err_j, err_n, atol=PARITY, rtol=0)
+    np.testing.assert_allclose(dmin_j, dmin_n, atol=PARITY, rtol=0)
+    np.testing.assert_allclose(conf_j, conf_n, atol=PARITY, rtol=0)
+    assert ((conf_j > 0) & (conf_j <= 1)).all()
+
+
+def test_batch_of_one_equals_estimate(fitted_ala):
+    ala, _, test = fitted_ala
+    q = _queries(test, n=1)[0]
+    err, conf = ala.estimate(q)
+    err_b, _, conf_b = ala.estimate_batch([q], backend="jax")
+    assert err_b[0] == pytest.approx(err, abs=PARITY)
+    assert conf_b[0] == pytest.approx(conf, abs=PARITY)
+
+
+def test_batched_error_predictor_routes_jax_backend(fitted_ala):
+    ala, _, _ = fitted_ala
+    log = ala.sa_log
+    p_np = predict_error(ala.error_model, log.subsets[:6], log.universes)
+    p_jx = predict_error(ala.error_model, log.subsets[:6], log.universes,
+                         backend="jax")
+    np.testing.assert_allclose(p_jx, p_np, atol=PARITY, rtol=0)
+
+
+def test_confidence_decreases_under_shift_batched(fitted_ala):
+    ala, _, test = fitted_ala
+    ii, oo, bb, thpt = test
+    shifted = (ii * 7, oo * 5, bb, thpt * 0.1)
+    _, _, conf = ala.estimate_batch([test, shifted], backend="jax")
+    assert conf[0] > conf[1], conf
+
+
+def test_out_of_range_mass_lands_in_reserved_bins(fitted_ala):
+    """Training rows never occupy the boundary bins; a workload far
+    outside the range concentrates there and reads as distant."""
+    ala, train, test = fitted_ala
+    bank = ala.bank()
+    assert (bank.hist[:, :, 0] == 0).all()
+    assert (bank.hist[:, :, -1] == 0).all()
+    far = tuple(v * 1000.0 for v in test)
+    _, dmin, conf = ala.estimate_batch([test, far], backend="jax")
+    assert conf[1] < conf[0]
+    assert dmin[1] > 0.9          # everything in bins no subset touches
+
+
+def test_bank_max_subsets_window(fitted_ala):
+    """An explicit max_subsets rebuilds a cached bank; the default
+    window matches the serial confidence() cap."""
+    ala, _, _ = fitted_ala
+    full = len(ala.sa_log.subsets)
+    default = ala.bank()
+    assert default.n_subsets == min(full, 200)
+    small = ala.bank(max_subsets=3)
+    assert small.n_subsets == 3
+    assert small.subsets == ala.sa_log.subsets[-3:]
+    assert ala.bank() is small            # None reuses the cache
+    assert ala.bank(max_subsets=full).n_subsets == full
+
+
+# ------------------------------------------------------------ edge cases --
+def _degenerate_log(train):
+    """Every subset selects < MIN_SUBSET_ROWS training rows."""
+    ii, oo, bb, _ = train
+    universes = {"ii": np.unique(ii), "oo": np.unique(oo),
+                 "bb": np.unique(bb)}
+    empty = {"ii": frozenset([universes["ii"][0]]),
+             "oo": frozenset([universes["oo"][0]]),
+             "bb": frozenset([universes["bb"][0]])}
+    # one (ii, oo, bb) cell holds at most one training row
+    return SALog(subsets=[empty, dict(empty)], errors=[100.0, 100.0],
+                 universes=universes, best_subset=empty, best_error=100.0)
+
+
+def test_degenerate_log_yields_inf_sentinel_both_paths():
+    train, test = _split_toy()
+    log = _degenerate_log(train)
+    # regression: the legacy serial loop used to report d_min = 1.0
+    # (confidence 0.5) when every subset was skipped
+    d, c = confidence(train, log, test)
+    assert np.isinf(d) and c == 0.0
+    bank = build_subset_bank(train, log)
+    assert not bank.valid.any()
+    for backend in ("numpy", "jax"):
+        d_min, conf = bank_confidence(bank, [test], backend=backend)
+        assert np.isinf(d_min[0]) and conf[0] == 0.0
+
+
+def test_partially_degenerate_bank_skips_invalid_subsets(fitted_ala):
+    ala, train, test = fitted_ala
+    log = ala.sa_log
+    tiny = _degenerate_log(train).subsets[0]
+    mixed = SALog(subsets=[tiny] + list(log.subsets),
+                  errors=[100.0] + list(log.errors),
+                  universes=log.universes, best_subset=log.best_subset,
+                  best_error=log.best_error)
+    bank = build_subset_bank(train, mixed)
+    assert not bank.valid[0] and bank.valid[1:].all()
+    D = bank_distances(bank, [test], backend="numpy")
+    d_min, conf = dmin_confidence(D, bank.valid)
+    # the invalid subset's column must not win the min
+    assert d_min[0] == pytest.approx(D[0, 1:][bank.valid[1:]].min())
+    assert 0.0 < conf[0] <= 1.0
+
+
+def test_all_nan_throughput_query_filled_with_predictions(fitted_ala):
+    ala, _, test = fitted_ala
+    ii, oo, bb, _ = test
+    nan_q = (ii, oo, bb, np.full(len(ii), np.nan))
+    filled_q = (ii, oo, bb, ala.predict(ii, oo, bb))
+    err_a, dmin_a, conf_a = ala.estimate_batch([nan_q], backend="jax")
+    err_b, dmin_b, conf_b = ala.estimate_batch([filled_q], backend="jax")
+    assert np.isfinite([err_a[0], dmin_a[0], conf_a[0]]).all()
+    assert err_a[0] == pytest.approx(err_b[0], abs=PARITY)
+    assert conf_a[0] == pytest.approx(conf_b[0], abs=PARITY)
+
+
+def test_ragged_query_lengths_one_call(fitted_ala):
+    ala, _, test = fitted_ala
+    qs = [tuple(v[:k] for v in test) for k in (2, 5, 17)]
+    err, d_min, conf = ala.estimate_batch(qs, backend="jax")
+    assert err.shape == d_min.shape == conf.shape == (3,)
+    assert np.isfinite(err).all() and np.isfinite(conf).all()
+    # per-query results are independent of their batch neighbours
+    solo = ala.estimate_batch([qs[1]], backend="jax")
+    assert conf[1] == pytest.approx(solo[2][0], abs=PARITY)
+
+
+# ----------------------------------------------------- registry dispatch --
+def test_registry_estimate_groups_rows_by_combo():
+    from repro.core.dataset import Dataset
+    from repro.core.registry import ModelRegistry
+    rng = np.random.default_rng(0)
+    cols = {k: [] for k in ("model", "ii", "oo", "bb", "thpt")}
+    for model in ("a", "b"):
+        for ii in (128.0, 512.0, 2048.0):
+            for oo in (128.0, 1024.0):
+                c = rng.uniform(2e3, 2e4)
+                for bb in (1.0, 2.0, 4.0, 8.0, 16.0, 64.0):
+                    cols["model"].append(model)
+                    cols["ii"].append(ii)
+                    cols["oo"].append(oo)
+                    cols["bb"].append(bb)
+                    cols["thpt"].append(
+                        (c - 0.9 * c * np.exp(-0.05 * bb))
+                        * rng.lognormal(0, 0.02))
+    data = Dataset({k: np.asarray(v) for k, v in cols.items()})
+    sa = SAConfig(n_iters=4, seed=0, n_chains=2, gbt_kw=GBT_KW)
+    reg = ModelRegistry(keys=("model",)).fit(data, **GBT_KW)
+    reg.fit_uncertainty(data, sa_cfg=sa, **GBT_KW)
+    err, d_min, conf = reg.estimate(data)
+    assert err.shape == d_min.shape == conf.shape == (len(data),)
+    assert np.isfinite(err).all() and (conf > 0).all()
+    # rows of one combo all share that combo's single workload estimate
+    for model in ("a", "b"):
+        m = data["model"] == model
+        assert np.unique(err[m]).size == 1
+        assert np.unique(conf[m]).size == 1
+    # unknown-combo rows get the explicit degenerate sentinel
+    other = Dataset({k: np.asarray(v[:6]) if k != "model"
+                     else np.asarray(["zz"] * 6)
+                     for k, v in cols.items()})
+    e2, d2, c2 = reg.estimate(other)
+    assert np.isnan(e2).all() and np.isinf(d2).all() and (c2 == 0).all()
