@@ -25,10 +25,16 @@ CPU_GRID_OO = (8, 16)
 CPU_GRID_BB = (1, 2, 4, 8, 16)
 
 
-def measure_arch(arch: str, grid_ii: Sequence[int] = CPU_GRID_II,
-                 grid_oo: Sequence[int] = CPU_GRID_OO,
-                 grid_bb: Sequence[int] = CPU_GRID_BB,
+def measure_arch(arch: str, grid_ii: Optional[Sequence[int]] = None,
+                 grid_oo: Optional[Sequence[int]] = None,
+                 grid_bb: Optional[Sequence[int]] = None,
                  reps: int = 2, seed: int = 0) -> Dataset:
+    """Sweep the engine over a grid; ``None`` grids fall back to the CPU
+    smoke defaults, so CLI overrides (``benchmarks/run.py --grid-ii ...``)
+    and TPU-scale sweeps share this one code path."""
+    grid_ii = CPU_GRID_II if grid_ii is None else tuple(grid_ii)
+    grid_oo = CPU_GRID_OO if grid_oo is None else tuple(grid_oo)
+    grid_bb = CPU_GRID_BB if grid_bb is None else tuple(grid_bb)
     cfg = get_smoke_config(arch)
     model = Model(cfg)
     params = model.init(jax.random.key(seed))

@@ -78,5 +78,8 @@ class Dataset:
     @classmethod
     def from_rows(cls, rows: Iterable[Dict]) -> "Dataset":
         rows = list(rows)
+        if not rows:
+            raise ValueError("from_rows needs at least one row (the "
+                             "column schema comes from the first row)")
         keys = rows[0].keys()
         return cls({k: np.asarray([r[k] for r in rows]) for k in keys})

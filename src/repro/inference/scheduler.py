@@ -6,8 +6,10 @@ replica counts without benchmarking every configuration.
 
 * ``plan_batch_size`` — smallest bb whose predicted throughput meets a
   target, or the bb maximizing predicted throughput under a per-token
-  latency SLO.  Low-confidence predictions are derated by a safety factor
-  (c < threshold => require headroom 1/c).
+  latency SLO.  Low-confidence predictions are derated by the clamped
+  ``derate_confidence`` safety factor (proportional below the floor,
+  never under ``min_derate`` — so the implied scale-out headroom is
+  bounded and the degenerate confidence=0.0 sentinel stays finite).
 * ``BatchingQueue``  — groups incoming requests into (ii, oo)-homogeneous
   batches of the planned size (the regime the engine serves).
 """
@@ -36,15 +38,36 @@ class CapacityPlan:
     confidence: float
     derated_thpt: float
     replicas: int = 1
+    degenerate: bool = False   # confidence hit the (inf, 0.0) sentinel
+
+
+def derate_confidence(conf: float, floor: float = 0.7,
+                      min_derate: float = 0.25) -> float:
+    """Safety multiplier applied to a prediction with confidence ``conf``.
+
+    Full trust at or above ``floor``; below it, derate proportionally but
+    never under ``min_derate`` — the PR-3 degenerate sentinel
+    (``confidence == 0.0``) and non-finite garbage land on ``min_derate``
+    instead of zeroing the plan (whose 1/derate headroom would divide by
+    zero).  Shared by the static ``CapacityPlanner`` and the dynamic
+    ``repro.serving.autoscaler``."""
+    if not np.isfinite(conf):
+        return min_derate
+    if conf >= floor:
+        return 1.0
+    return float(np.clip(conf, min_derate, 1.0))
 
 
 class CapacityPlanner:
     def __init__(self, ala: ALA, candidate_bb: Tuple[int, ...] = (
             1, 2, 4, 8, 16, 32, 64, 128, 256),
-            confidence_floor: float = 0.7):
+            confidence_floor: float = 0.7,
+            min_derate: float = 0.25, max_replicas: int = 64):
         self.ala = ala
         self.candidate_bb = candidate_bb
         self.confidence_floor = confidence_floor
+        self.min_derate = min_derate
+        self.max_replicas = max_replicas
 
     def _confidence(self, ii: int, oo: int, bbs: np.ndarray) -> float:
         if self.ala.error_model is None or self.ala.sa_log is None:
@@ -62,7 +85,8 @@ class CapacityPlanner:
         thpt = self.ala.predict(np.full(len(bbs), float(ii)),
                                 np.full(len(bbs), float(oo)), bbs)
         conf = self._confidence(ii, oo, bbs)
-        derate = 1.0 if conf >= self.confidence_floor else conf
+        derate = derate_confidence(conf, self.confidence_floor,
+                                   self.min_derate)
         eff = thpt * derate
         ok = np.ones(len(bbs), bool)
         if max_token_latency_s is not None:
@@ -79,10 +103,12 @@ class CapacityPlanner:
             i = int(np.argmax(eff))
         replicas = 1
         if target_thpt is not None and eff[i] < target_thpt:
-            replicas = int(np.ceil(target_thpt / max(eff[i], 1e-9)))
+            replicas = int(min(np.ceil(target_thpt / max(eff[i], 1e-9)),
+                               self.max_replicas))
         return CapacityPlan(bb=int(bbs[i]), predicted_thpt=float(thpt[i]),
                             confidence=float(conf),
-                            derated_thpt=float(eff[i]), replicas=replicas)
+                            derated_thpt=float(eff[i]), replicas=replicas,
+                            degenerate=bool(conf <= 0.0))
 
 
 class BatchingQueue:

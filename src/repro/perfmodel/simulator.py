@@ -84,17 +84,44 @@ def weights_read_bytes(cfg: ModelConfig, bb: float,
     return (n_dense_equiv - moe_total + moe_read) * dtype_bytes
 
 
-def decode_step_time(setup: ServingSetup, bb: float, context: float) -> float:
+def weight_bytes_total(setup: ServingSetup) -> float:
+    """Resident parameter bytes across the whole TP group."""
+    return setup.cfg.param_count(active_only=False) * setup.dtype_bytes
+
+
+def kv_capacity_tokens(setup: ServingSetup) -> float:
+    """KV-cache token budget: HBM across the TP group minus weights.
+
+    Attention-free models (kv bytes/token == 0) report an effectively
+    unbounded budget — their per-sequence state is O(1) and tiny."""
+    budget = setup.hw.hbm_bytes * setup.chips - weight_bytes_total(setup)
+    per_tok = kv_bytes_per_token(setup.cfg, setup.dtype_bytes)
+    if per_tok <= 0.0:
+        return float("inf")
+    return max(budget, 0.0) / per_tok
+
+
+def decode_step_time_group(setup: ServingSetup, contexts) -> float:
+    """One decode iteration over a heterogeneous running batch.
+
+    ``contexts`` holds each sequence's current context length (prompt +
+    generated so far).  Equal contexts reduce exactly to the classic
+    ``decode_step_time(setup, bb, context)``."""
+    contexts = np.asarray(contexts, np.float64)
+    bb = len(contexts)
+    if bb == 0:
+        return 0.0
+    ctx_sum = float(contexts.sum())
     cfg, hw, chips = setup.cfg, setup.hw, setup.chips
     attn, mamba, sl, ml, dense, moe = _per_layer_counts(cfg)
     n_active = cfg.param_count(active_only=True)
     # compute: 2 FLOPs/param/token + attention dot products over context
     flops = 2 * n_active * bb
-    flops += 2 * 2 * attn * cfg.n_heads * cfg.d_head * context * bb
+    flops += 2 * 2 * attn * cfg.n_heads * cfg.d_head * ctx_sum
     t_compute = flops / (chips * hw.peak_flops * hw.mfu_prefill)
     # memory: weights touched once + KV/state per sequence
     mem = weights_read_bytes(cfg, bb, setup.dtype_bytes)
-    mem += bb * context * kv_bytes_per_token(cfg, setup.dtype_bytes)
+    mem += ctx_sum * kv_bytes_per_token(cfg, setup.dtype_bytes)
     mem += bb * state_bytes(cfg, setup.dtype_bytes)
     t_mem = mem / (chips * hw.hbm_bw * hw.mfu_decode)
     # ICI: 2 all-reduces (attn+ffn) of (bb, d_model) per layer, ring cost
@@ -108,17 +135,33 @@ def decode_step_time(setup: ServingSetup, bb: float, context: float) -> float:
     return max(t_compute, t_mem, t_ici) / setup.framework_eff
 
 
-def prefill_time(setup: ServingSetup, ii: float, bb: float) -> float:
+def decode_step_time(setup: ServingSetup, bb: float, context: float) -> float:
+    return decode_step_time_group(setup, np.full(int(round(bb)), context))
+
+
+def prefill_step_time(setup: ServingSetup, prompt_lens) -> float:
+    """One prefill iteration over a group of prompts of given lengths.
+
+    Equal lengths reduce exactly to ``prefill_time(setup, ii, bb)``."""
+    prompt_lens = np.asarray(prompt_lens, np.float64)
+    if len(prompt_lens) == 0:
+        return 0.0
+    tok_sum = float(prompt_lens.sum())
+    sq_sum = float((prompt_lens * prompt_lens).sum())
     cfg, hw, chips = setup.cfg, setup.hw, setup.chips
     attn, *_ = _per_layer_counts(cfg)
     n_active = cfg.param_count(active_only=True)
-    flops = 2 * n_active * ii * bb
-    flops += 2 * 2 * attn * cfg.n_heads * cfg.d_head * ii * ii * bb / 2
+    flops = 2 * n_active * tok_sum
+    flops += 2 * 2 * attn * cfg.n_heads * cfg.d_head * sq_sum / 2
     t_compute = flops / (chips * hw.peak_flops * hw.mfu_prefill)
     mem = (weights_read_bytes(cfg, 1e9, setup.dtype_bytes)
-           + bb * ii * kv_bytes_per_token(cfg, setup.dtype_bytes))
+           + tok_sum * kv_bytes_per_token(cfg, setup.dtype_bytes))
     t_mem = mem / (chips * hw.hbm_bw * hw.mfu_decode)
     return max(t_compute, t_mem) / setup.framework_eff
+
+
+def prefill_time(setup: ServingSetup, ii: float, bb: float) -> float:
+    return prefill_step_time(setup, np.full(int(round(bb)), ii))
 
 
 def throughput(setup: ServingSetup, ii: float, oo: float, bb: float) -> float:

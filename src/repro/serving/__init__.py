@@ -1,0 +1,6 @@
+# Trace-driven continuous-batching serving simulator with ALA-in-the-loop
+# autoscaling.  Layers:
+#   traces     — workload trace generators (arrival processes x shape mixes)
+#   simulator  — discrete-event continuous-batching replica fleet
+#   autoscaler — control policies (static baseline, ALA-guided)
+#   adapter    — steady-state windows -> core.dataset.Dataset rows

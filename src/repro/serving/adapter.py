@@ -1,0 +1,107 @@
+"""Simulated-trace results -> ``core.dataset.Dataset`` rows.
+
+Dynamic-trace scenarios feed the same registry / ALA fit path as the
+static grids: chop a ``SimResult`` into fixed windows, keep the
+steady-state ones (at least ``min_completions`` finished requests and
+some decode work), and summarize each into one benchmark row:
+
+  * ``ii, oo`` — power-of-two bucketed means over the window's completed
+    requests (the same bucketing ``BatchingQueue`` uses, so heterogeneous
+    shapes collapse into a fittable grid);
+  * ``bb``     — duration-weighted mean decode batch size;
+  * ``thpt``   — output tokens per *busy* second across the window's
+    steps, the per-replica saturated-throughput analog of the static
+    harness measurement.
+
+``windows_to_dataset`` stamps the registry key columns (model, acc,
+acc_count, back, prec, mode) so rows from a trace run sit beside — and
+group separately from — static-grid rows in one ``Dataset``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.dataset import Dataset
+from repro.inference.scheduler import BatchingQueue
+from repro.perfmodel.simulator import ServingSetup
+from repro.serving.simulator import SimResult
+
+TRACE_BACKEND = "sim-trace"
+
+
+@dataclasses.dataclass
+class WindowSummary:
+    t0: float
+    t1: float
+    ii: int                    # bucketed mean prompt length
+    oo: int                    # bucketed mean output length
+    bb: float                  # duration-weighted mean decode batch
+    thpt: float                # output tokens / busy second
+    n_completions: int
+
+
+def summarize_windows(result: SimResult, window_s: float = 5.0,
+                      min_completions: int = 2) -> List[WindowSummary]:
+    if window_s <= 0:
+        raise ValueError("window_s must be positive")
+    horizon = result.sim_end_s
+    n_win = max(int(np.ceil(horizon / window_s)), 1)
+    steps = [[] for _ in range(n_win)]
+    for s in result.steps:
+        w = min(int(s.t_end / window_s), n_win - 1)
+        steps[w].append(s)
+    comps = [[] for _ in range(n_win)]
+    for r in result.completed:
+        w = min(int(r.done_s / window_s), n_win - 1)
+        comps[w].append(r)
+    out: List[WindowSummary] = []
+    for w in range(n_win):
+        cs, ss = comps[w], steps[w]
+        dec = [s for s in ss if s.kind == "decode"]
+        if len(cs) < min_completions or not dec:
+            continue
+        busy = sum(s.duration_s for s in ss)
+        toks = sum(s.tokens_out for s in ss)
+        if busy <= 0 or toks <= 0:
+            continue
+        dec_t = sum(s.duration_s for s in dec)
+        bb = sum(s.bb * s.duration_s for s in dec) / max(dec_t, 1e-12)
+        bii, boo = BatchingQueue.bucket(
+            float(np.mean([r.ii for r in cs])),
+            float(np.mean([r.oo for r in cs])))
+        out.append(WindowSummary(
+            t0=w * window_s, t1=min((w + 1) * window_s, horizon),
+            ii=bii, oo=boo,
+            bb=float(bb), thpt=toks / busy, n_completions=len(cs)))
+    return out
+
+
+def windows_to_rows(windows: List[WindowSummary], setup: ServingSetup,
+                    model: str, back: str = TRACE_BACKEND,
+                    prec: str = "bf16", mode: str = "serve"
+                    ) -> List[Dict]:
+    return [dict(model=model, acc=setup.hw.name, acc_count=setup.chips,
+                 back=back, prec=prec, mode=mode,
+                 ii=w.ii, oo=w.oo, bb=max(int(round(w.bb)), 1),
+                 thpt=float(w.thpt))
+            for w in windows]
+
+
+def windows_to_dataset(result: SimResult, setup: ServingSetup, model: str,
+                       window_s: float = 5.0, min_completions: int = 2,
+                       back: str = TRACE_BACKEND) -> Dataset:
+    """Steady-state windows of one simulated run as a registry dataset.
+
+    Raises ``ValueError`` when no window reaches steady state — callers
+    should lengthen the trace or shrink ``window_s`` rather than feed an
+    empty dataset into a fit."""
+    rows = windows_to_rows(
+        summarize_windows(result, window_s, min_completions),
+        setup, model, back=back)
+    if not rows:
+        raise ValueError("no steady-state windows in this run; "
+                         "lengthen the trace or shrink window_s")
+    return Dataset.from_rows(rows)

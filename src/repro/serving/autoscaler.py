@@ -1,0 +1,91 @@
+"""Control policies for the serving fleet: static baseline + ALA-in-the-loop.
+
+``ALAAutoscaler`` generalizes ``inference.scheduler.plan_batch_size`` to
+the dynamic setting.  At every control tick it:
+
+  1. observes the window's arrival rate and mean request shape;
+  2. asks ALA for per-replica throughput at each candidate batch cap and
+     for the (predicted error, confidence) of that workload region
+     (Alg 5 + Alg 8);
+  3. derates low-confidence predictions through the shared
+    ``derate_confidence`` safety factor — the PR-3 degenerate sentinel
+    (``confidence == 0.0``) never divides by zero, it *falls back to the
+    measured rate* from the last window instead (and to the maximally
+    derated prediction when the fleet was idle);
+  4. sizes the fleet: ``replicas = ceil(demand / (util_target * supply))``
+    where demand is the window's output-token arrival rate, plus a queue
+    drain term so backlogs clear within roughly one control interval.
+
+``StaticPolicy`` is the static-bb baseline the benchmark compares
+against: fixed replica count, fixed admission cap, no feedback.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.ala import ALA
+from repro.inference.scheduler import derate_confidence
+from repro.serving.simulator import Action, Observation
+
+
+@dataclasses.dataclass
+class StaticPolicy:
+    """No-op controller: whatever it was told at construction, forever."""
+    n_replicas: int = 1
+    batch_cap: int = 64
+
+    def control(self, obs: Observation) -> Action:
+        return Action(n_replicas=self.n_replicas, batch_cap=self.batch_cap)
+
+
+@dataclasses.dataclass
+class ALAAutoscaler:
+    ala: ALA
+    candidate_bb: Tuple[int, ...] = (8, 16, 32, 64, 128)
+    confidence_floor: float = 0.7
+    min_derate: float = 0.25
+    util_target: float = 0.75         # provision 1/util_target headroom
+    min_replicas: int = 1
+    max_replicas: int = 8
+    # diagnostics: (confidence, derate, used_fallback) per control tick
+    log: list = dataclasses.field(default_factory=list)
+
+    def _predict_per_replica(self, ii: float, oo: float
+                             ) -> Tuple[int, float, float]:
+        """(best bb, predicted tok/s at it, confidence of the region)."""
+        bbs = np.asarray(self.candidate_bb, np.float64)
+        thpt = self.ala.predict(np.full(len(bbs), ii),
+                                np.full(len(bbs), oo), bbs)
+        conf = 1.0
+        if self.ala.error_model is not None and self.ala.sa_log is not None:
+            q = (np.full(len(bbs), ii), np.full(len(bbs), oo), bbs,
+                 np.full(len(bbs), np.nan))
+            _, conf = self.ala.estimate(q)
+        i = int(np.argmax(thpt))
+        return int(bbs[i]), float(thpt[i]), float(conf)
+
+    def control(self, obs: Observation) -> Action:
+        if obs.n_arrivals == 0:
+            # idle window: hold the fleet, nothing to infer demand from
+            return Action(n_replicas=obs.n_active_replicas,
+                          batch_cap=obs.batch_cap)
+        bb, pred, conf = self._predict_per_replica(obs.mean_ii, obs.mean_oo)
+        derate = derate_confidence(conf, self.confidence_floor,
+                                   self.min_derate)
+        fallback = conf <= 0.0 and obs.measured_tok_s > 0.0
+        if fallback:
+            # degenerate sentinel: trust what the fleet actually served
+            supply = obs.measured_tok_s
+        else:
+            supply = pred * derate
+        self.log.append((float(conf), float(derate), bool(fallback)))
+        # demand: fresh output tokens/s plus draining the standing queue
+        demand = obs.arrival_rate * obs.mean_oo
+        backlog = (obs.queue_len * obs.mean_oo) / max(obs.window_s, 1e-9)
+        need = (demand + backlog) / max(self.util_target * supply, 1e-9)
+        n = int(np.clip(int(np.ceil(need)), self.min_replicas,
+                        self.max_replicas))
+        return Action(n_replicas=n, batch_cap=bb)

@@ -1,0 +1,415 @@
+"""Discrete-event continuous-batching serving simulator.
+
+Each replica is a continuous-batching engine over the roofline step-time
+primitives of ``repro.perfmodel.simulator``: an iteration is either a
+*prefill step* (admits up to ``max_prefill_requests`` waiting requests,
+costed by ``prefill_step_time`` over their heterogeneous prompt lengths)
+or a *decode step* (every running sequence emits one token, costed by
+``decode_step_time_group`` over their current contexts).  Prefill is
+prioritized — the vLLM-style default.  KV memory is accounted per
+``HardwareProfile``: a request reserves ``ii + oo`` tokens of KV at
+admission (no mid-flight eviction), bounded by ``kv_capacity_tokens``.
+
+The fleet layer routes arrivals to the least-loaded active replica and
+fires a control event every ``control_interval_s``; a policy object
+(see ``repro.serving.autoscaler``) observes the last window and sets the
+replica count and the per-replica admission batch cap.  New replicas
+come up after ``provision_delay_s``; scale-down drains (stops routing,
+finishes in-flight work).  Every event pops through one seeded,
+counter-tiebroken heap, so a run is exactly reproducible.
+
+Metrics: per-request TTFT / TPOT / E2E, fleet goodput, TTFT-SLO
+attainment (unfinished requests count as misses), replica-seconds
+(cost), and the raw step log consumed by ``repro.serving.adapter``.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import heapq
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.perfmodel.simulator import (ServingSetup, decode_step_time_group,
+                                       kv_capacity_tokens, prefill_step_time)
+from repro.serving.traces import Trace, TraceRequest
+
+_ARRIVAL, _STEP_DONE, _CONTROL, _PROVISION = 0, 1, 2, 3
+
+
+@dataclasses.dataclass
+class SimConfig:
+    setup: ServingSetup
+    batch_cap: int = 64
+    max_prefill_requests: int = 8
+    n_replicas: int = 1
+    max_replicas: int = 8
+    control_interval_s: float = 2.0
+    provision_delay_s: float = 1.0
+    drain_s: float = 120.0            # grace period past the horizon
+    kv_capacity_override: Optional[float] = None  # tokens; None -> profile
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    rid: int
+    ii: int
+    oo: int
+    arrival_s: float
+    replica: int = -1
+    first_token_s: Optional[float] = None
+    done_s: Optional[float] = None
+
+    @property
+    def completed(self) -> bool:
+        return self.done_s is not None
+
+    @property
+    def ttft_s(self) -> float:
+        return (self.first_token_s - self.arrival_s
+                if self.first_token_s is not None else float("inf"))
+
+    @property
+    def e2e_s(self) -> float:
+        return (self.done_s - self.arrival_s if self.done_s is not None
+                else float("inf"))
+
+    @property
+    def tpot_s(self) -> float:
+        if self.done_s is None or self.first_token_s is None:
+            return float("inf")
+        return (self.done_s - self.first_token_s) / max(self.oo - 1, 1)
+
+
+@dataclasses.dataclass
+class StepRecord:
+    t_end: float
+    replica: int
+    kind: str                          # "prefill" | "decode"
+    bb: int
+    duration_s: float
+    tokens_out: int
+
+
+class _Seq:
+    __slots__ = ("rec", "generated")
+
+    def __init__(self, rec: RequestRecord):
+        self.rec = rec
+        self.generated = 0
+
+    @property
+    def context(self) -> int:
+        return self.rec.ii + self.generated
+
+
+class Replica:
+    def __init__(self, rid: int, setup: ServingSetup, batch_cap: int,
+                 max_prefill: int, kv_capacity: float):
+        self.rid = rid
+        self.setup = setup
+        self.batch_cap = batch_cap
+        self.max_prefill = max_prefill
+        self.kv_capacity = kv_capacity
+        self.waiting: Deque[_Seq] = collections.deque()
+        self.running: List[_Seq] = []
+        self.prefilling: List[_Seq] = []
+        self.kv_reserved = 0.0
+        self.busy = False
+        self.draining = False
+        self.active = True            # provisioned and routable
+        self.provisioning = False     # _PROVISION event in flight
+
+    @property
+    def load(self) -> int:
+        return len(self.waiting) + len(self.running) + len(self.prefilling)
+
+    def _kv_need(self, s: _Seq) -> float:
+        return float(s.rec.ii + s.rec.oo)
+
+    def begin_step(self) -> Optional[Tuple[float, str]]:
+        """Pick the next iteration; returns (duration, kind) or None."""
+        admit: List[_Seq] = []
+        while (self.waiting and len(admit) < self.max_prefill
+               and len(self.running) + len(admit) < self.batch_cap
+               and self.kv_reserved + self._kv_need(self.waiting[0])
+               <= self.kv_capacity):
+            s = self.waiting.popleft()
+            self.kv_reserved += self._kv_need(s)
+            admit.append(s)
+        if admit:
+            self.prefilling = admit
+            dur = prefill_step_time(self.setup,
+                                    [s.rec.ii for s in admit])
+            return dur, "prefill"
+        if self.running:
+            dur = decode_step_time_group(self.setup,
+                                         [s.context for s in self.running])
+            return dur, "decode"
+        return None
+
+    def finish_step(self, kind: str, t_end: float) -> List[RequestRecord]:
+        """Apply a completed iteration; returns finished request records."""
+        done: List[RequestRecord] = []
+        if kind == "prefill":
+            for s in self.prefilling:
+                s.generated = 1
+                s.rec.first_token_s = t_end
+                if s.generated >= s.rec.oo:
+                    s.rec.done_s = t_end
+                    self.kv_reserved -= self._kv_need(s)
+                    done.append(s.rec)
+                else:
+                    self.running.append(s)
+            self.prefilling = []
+        else:
+            still: List[_Seq] = []
+            for s in self.running:
+                s.generated += 1
+                if s.generated >= s.rec.oo:
+                    s.rec.done_s = t_end
+                    self.kv_reserved -= self._kv_need(s)
+                    done.append(s.rec)
+                else:
+                    still.append(s)
+            self.running = still
+        return done
+
+
+@dataclasses.dataclass
+class Observation:
+    """What a control policy sees at each control tick."""
+    now: float
+    window_s: float
+    n_arrivals: int
+    mean_ii: float                    # over window arrivals (0 if none)
+    mean_oo: float
+    arrival_rate: float               # req/s over the window
+    queue_len: int                    # fleet-wide waiting requests
+    n_running: int
+    n_active_replicas: int
+    batch_cap: int
+    decode_tokens: int                # emitted in window, fleet-wide
+    busy_s: float                     # summed step time in window
+    measured_tok_s: float             # decode_tokens / busy_s (0 if idle)
+
+
+@dataclasses.dataclass
+class Action:
+    n_replicas: int
+    batch_cap: int
+
+
+@dataclasses.dataclass
+class SimResult:
+    records: List[RequestRecord]
+    steps: List[StepRecord]
+    sim_end_s: float
+    n_events: int
+    replica_seconds: float
+    controls: List[Tuple[float, Action]]
+
+    @property
+    def completed(self) -> List[RequestRecord]:
+        return [r for r in self.records if r.completed]
+
+    def slo_attainment(self, ttft_slo_s: float) -> float:
+        if not self.records:
+            return 1.0
+        ok = sum(1 for r in self.records if r.ttft_s <= ttft_slo_s)
+        return ok / len(self.records)
+
+    @property
+    def goodput_tok_s(self) -> float:
+        toks = sum(r.oo for r in self.completed)
+        return toks / max(self.sim_end_s, 1e-9)
+
+    def ttft_percentile(self, q: float) -> float:
+        vals = [r.ttft_s for r in self.records if np.isfinite(r.ttft_s)]
+        return float(np.percentile(vals, q)) if vals else float("inf")
+
+
+class FleetSimulator:
+    def __init__(self, trace: Trace, cfg: SimConfig, policy=None):
+        self.trace = trace
+        self.cfg = cfg
+        self.policy = policy
+        self.kv_cap = (cfg.kv_capacity_override
+                       if cfg.kv_capacity_override is not None
+                       else kv_capacity_tokens(cfg.setup))
+
+    def _new_replica(self, rid: int, active: bool = True) -> Replica:
+        r = Replica(rid, self.cfg.setup, self.cfg.batch_cap,
+                    self.cfg.max_prefill_requests, self.kv_cap)
+        r.active = active
+        return r
+
+    def run(self) -> SimResult:
+        cfg = self.cfg
+        replicas = [self._new_replica(i)
+                    for i in range(max(cfg.n_replicas, 1))]
+        records: Dict[int, RequestRecord] = {}
+        steps: List[StepRecord] = []
+        controls: List[Tuple[float, Action]] = []
+        heap: List[Tuple[float, int, int, object]] = []
+        tick = 0
+
+        steps_in_flight = 0
+
+        def push(t: float, kind: int, payload=None):
+            nonlocal tick, steps_in_flight
+            heapq.heappush(heap, (t, kind, tick, payload))
+            tick += 1
+            if kind == _STEP_DONE:
+                steps_in_flight += 1
+
+        for req in self.trace.requests:
+            push(req.arrival_s, _ARRIVAL, req)
+        n_pending = len(self.trace.requests)
+        if self.policy is not None and cfg.control_interval_s > 0:
+            push(cfg.control_interval_s, _CONTROL, None)
+
+        # per-window accumulators for Observation
+        win = dict(arrivals=0, ii=0, oo=0, tokens=0, busy=0.0,
+                   last=0.0)
+        now, n_events, replica_seconds, last_t = 0.0, 0, 0.0, 0.0
+        deadline = self.trace.horizon_s + cfg.drain_s
+
+        def maybe_start(r: Replica):
+            if r.busy:
+                return
+            got = r.begin_step()
+            if got is not None:
+                dur, kind = got
+                r.busy = True
+                push(now + dur, _STEP_DONE, (r, kind, dur))
+
+        def route(req: TraceRequest):
+            nonlocal n_pending
+            rec = RequestRecord(rid=req.rid, ii=req.ii, oo=req.oo,
+                                arrival_s=req.arrival_s)
+            records[req.rid] = rec
+            if req.ii + req.oo > self.kv_cap:
+                # can never fit any replica's KV: reject at admission
+                # (inf TTFT => SLO miss) instead of head-of-line blocking
+                n_pending -= 1
+                return
+            cands = [r for r in replicas if r.active and not r.draining]
+            if not cands:
+                cands = [r for r in replicas if r.active] or replicas
+            tgt = min(cands, key=lambda r: (r.load, r.rid))
+            rec.replica = tgt.rid
+            tgt.waiting.append(_Seq(rec))
+            maybe_start(tgt)
+
+        def apply_action(act: Action):
+            act = Action(n_replicas=int(np.clip(act.n_replicas, 1,
+                                                cfg.max_replicas)),
+                         batch_cap=max(int(act.batch_cap), 1))
+            n_active = sum(1 for r in replicas
+                           if r.active and not r.draining)
+            if act.n_replicas > n_active:
+                need = act.n_replicas - n_active
+                # un-drain warm replicas first, then re-provision
+                # decommissioned ones, then create fresh
+                for r in replicas:
+                    if need and r.active and r.draining:
+                        r.draining = False
+                        need -= 1
+                for r in replicas:
+                    if need and not r.active and not r.provisioning:
+                        r.draining = False
+                        r.provisioning = True
+                        push(now + cfg.provision_delay_s, _PROVISION, r)
+                        need -= 1
+                for _ in range(need):
+                    nr = self._new_replica(len(replicas), active=False)
+                    nr.provisioning = True
+                    replicas.append(nr)
+                    push(now + cfg.provision_delay_s, _PROVISION, nr)
+            elif act.n_replicas < n_active:
+                # drain the highest-index active replicas
+                for r in sorted(replicas, key=lambda r: -r.rid):
+                    if n_active <= act.n_replicas:
+                        break
+                    if r.active and not r.draining:
+                        r.draining = True
+                        if not r.busy and r.load == 0:
+                            r.active = False      # nothing to drain
+                        n_active -= 1
+            for r in replicas:    # after scale-up, so new replicas get it
+                r.batch_cap = act.batch_cap
+            return act
+
+        while heap:
+            t, kind, _, payload = heapq.heappop(heap)
+            if t > deadline:
+                break
+            n_active = sum(1 for r in replicas if r.active)
+            replica_seconds += n_active * (t - last_t)
+            last_t = now = t
+            n_events += 1
+            if kind == _ARRIVAL:
+                req = payload
+                win["arrivals"] += 1
+                win["ii"] += req.ii
+                win["oo"] += req.oo
+                route(req)
+            elif kind == _STEP_DONE:
+                steps_in_flight -= 1
+                r, skind, dur = payload
+                r.busy = False
+                n_pre = len(r.prefilling)
+                finished = r.finish_step(skind, t)
+                n_pending -= len(finished)
+                # every participant of the step emitted exactly one token
+                toks = (len(r.running) + len(finished)
+                        if skind == "decode" else n_pre)
+                steps.append(StepRecord(t_end=t, replica=r.rid, kind=skind,
+                                        bb=toks, duration_s=dur,
+                                        tokens_out=toks))
+                win["tokens"] += toks
+                win["busy"] += dur
+                maybe_start(r)
+                if r.draining and not r.busy and r.load == 0:
+                    r.active = False              # drained dry: decommission
+            elif kind == _PROVISION:
+                payload.provisioning = False
+                if not payload.draining:   # drained meanwhile: stay down
+                    payload.active = True
+                    maybe_start(payload)
+            elif kind == _CONTROL:
+                w = max(t - win["last"], 1e-9)
+                n_arr = win["arrivals"]
+                obs = Observation(
+                    now=t, window_s=w, n_arrivals=n_arr,
+                    mean_ii=win["ii"] / n_arr if n_arr else 0.0,
+                    mean_oo=win["oo"] / n_arr if n_arr else 0.0,
+                    arrival_rate=n_arr / w,
+                    queue_len=sum(len(r.waiting) for r in replicas),
+                    n_running=sum(len(r.running) + len(r.prefilling)
+                                  for r in replicas),
+                    n_active_replicas=sum(1 for r in replicas
+                                          if r.active and not r.draining),
+                    batch_cap=replicas[0].batch_cap,
+                    decode_tokens=win["tokens"], busy_s=win["busy"],
+                    measured_tok_s=(win["tokens"] / win["busy"]
+                                    if win["busy"] > 0 else 0.0))
+                act = apply_action(self.policy.control(obs))
+                controls.append((t, act))
+                win = dict(arrivals=0, ii=0, oo=0, tokens=0, busy=0.0,
+                           last=t)
+                if t + cfg.control_interval_s < self.trace.horizon_s:
+                    push(t + cfg.control_interval_s, _CONTROL, None)
+            if n_pending <= 0 and steps_in_flight == 0:
+                break
+
+        ordered = [records[r.rid] for r in self.trace.requests]
+        return SimResult(records=ordered, steps=steps, sim_end_s=now,
+                         n_events=n_events, replica_seconds=replica_seconds,
+                         controls=controls)
+
+
+def simulate(trace: Trace, cfg: SimConfig, policy=None) -> SimResult:
+    return FleetSimulator(trace, cfg, policy).run()

@@ -1,0 +1,102 @@
+"""inference.scheduler coverage: planner math, derating, batching queue."""
+import numpy as np
+import pytest
+
+from repro.core.ala import ALA
+from repro.core.expmodel import exp_model
+from repro.inference.scheduler import (BatchingQueue, CapacityPlanner,
+                                       Request, derate_confidence)
+
+
+@pytest.fixture(scope="module")
+def ala():
+    """ALA fit on clean synthetic exponential curves (no SA log, so the
+    planner's confidence path short-circuits to 1.0)."""
+    rows = []
+    bbs = np.array([1, 2, 4, 8, 16, 32, 64, 128], float)
+    for ii in (64.0, 128.0, 256.0, 512.0):
+        for oo in (64.0, 128.0, 256.0):
+            c = 2000.0 + 2.0 * oo - 0.5 * ii
+            for bb, t in zip(bbs, exp_model(bbs, 0.9 * c, 0.1, c)):
+                rows.append((ii, oo, bb, t))
+    ii, oo, bb, th = map(np.asarray, zip(*rows))
+    return ALA().fit(ii, oo, bb, th)
+
+
+# -------------------------------------------------------------- derating
+def test_derate_confidence_regions():
+    assert derate_confidence(0.9) == 1.0
+    assert derate_confidence(0.7) == 1.0
+    assert derate_confidence(0.5) == 0.5           # proportional band
+    assert derate_confidence(0.1) == 0.25          # clamped at min_derate
+    assert derate_confidence(0.0) == 0.25          # degenerate sentinel
+    assert derate_confidence(float("nan")) == 0.25
+    assert derate_confidence(float("inf")) == 0.25
+    assert derate_confidence(0.4, floor=0.5, min_derate=0.1) == 0.4
+
+
+def test_zero_confidence_plan_is_finite(ala):
+    """PR-3 degenerate sentinel (confidence=0.0) must not zero the plan
+    or blow up the replica count (the old 1/c headroom divided by 0)."""
+    planner = CapacityPlanner(ala, candidate_bb=(1, 4, 16, 64),
+                              max_replicas=16)
+    planner._confidence = lambda ii, oo, bbs: 0.0
+    plan = planner.plan_batch_size(128, 128, target_thpt=10_000.0)
+    assert plan.degenerate and plan.confidence == 0.0
+    assert plan.derated_thpt > 0.0                 # min_derate kept it alive
+    assert plan.derated_thpt == pytest.approx(
+        plan.predicted_thpt * planner.min_derate)
+    assert 1 <= plan.replicas <= 16                # clamped, not ~1e13
+
+
+# -------------------------------------------------------- capacity planner
+def test_plan_scales_bb_with_target(ala):
+    planner = CapacityPlanner(ala, candidate_bb=(1, 2, 4, 8, 16, 32, 64))
+    lo = planner.plan_batch_size(128, 128, target_thpt=500.0)
+    hi = planner.plan_batch_size(128, 128, target_thpt=2000.0)
+    assert lo.bb <= hi.bb
+    assert lo.confidence == 1.0 and lo.replicas == 1
+
+
+def test_replica_math_when_target_unreachable(ala):
+    planner = CapacityPlanner(ala, candidate_bb=(1, 2, 4, 8, 16, 32, 64))
+    plan = planner.plan_batch_size(128, 128, target_thpt=50_000.0)
+    assert plan.replicas == int(np.ceil(50_000.0 / plan.derated_thpt))
+    assert plan.replicas > 1
+    assert plan.bb == 64                # scaled out at the max-thpt batch
+
+
+def test_latency_slo_selects_batch(ala):
+    planner = CapacityPlanner(ala, candidate_bb=(1, 2, 4, 8, 16, 32, 64))
+    ok = planner.plan_batch_size(128, 128, max_token_latency_s=0.02)
+    assert ok.bb == 1                   # smallest qualifying batch wins
+    none = planner.plan_batch_size(128, 128, max_token_latency_s=1e-4)
+    assert none.bb == 64                # nothing qualifies: max-thpt fallback
+
+
+# ---------------------------------------------------------- batching queue
+def test_bucket_rounds_up_to_pow2():
+    assert BatchingQueue.bucket(100, 100) == (128, 128)
+    assert BatchingQueue.bucket(128, 1) == (128, 1)
+    assert BatchingQueue.bucket(129, 500) == (256, 512)
+
+
+def test_queue_groups_homogeneous_batches(ala):
+    planner = CapacityPlanner(ala, candidate_bb=(1, 2, 4))
+    q = BatchingQueue(planner, target_thpt=1e9)    # unreachable -> bb=4
+    rid = 0
+    for _ in range(9):
+        q.submit(Request(rid=rid, ii=100, oo=100)); rid += 1
+    for _ in range(3):
+        q.submit(Request(rid=rid, ii=300, oo=300)); rid += 1
+    batches = q.ready_batches()
+    keys = [k for k, _ in batches]
+    assert keys.count((128, 128)) == 2             # 9 // 4 full batches
+    assert all(len(b) == 4 for k, b in batches if k == (128, 128))
+    assert (512, 512) not in keys                  # 3 < planned bb
+    # every grouped request really belongs to its bucket
+    for k, b in batches:
+        assert all(BatchingQueue.bucket(r.ii, r.oo) == k for r in b)
+    rest = q.flush()
+    assert sum(len(b) for _, b in rest) == 12 - 8
+    assert q.ready_batches() == [] and q.flush() == []

@@ -1,0 +1,249 @@
+"""Serving subsystem: traces, fleet simulator, autoscaler, adapter."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.ala import ALA
+from repro.core.dataset import Dataset
+from repro.core.registry import ModelRegistry
+from repro.perfmodel.simulator import (ServingSetup, decode_step_time,
+                                       decode_step_time_group,
+                                       kv_capacity_tokens, prefill_step_time,
+                                       prefill_time, sample_throughput)
+from repro.perfmodel.tpu import TPU_V5E
+from repro.serving.adapter import summarize_windows, windows_to_dataset
+from repro.serving.autoscaler import ALAAutoscaler, StaticPolicy
+from repro.serving.simulator import (Action, Observation, SimConfig,
+                                     simulate)
+from repro.serving.traces import (Trace, TraceConfig, gamma_arrivals,
+                                  make_trace, mix, mmpp_arrivals,
+                                  poisson_arrivals)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    return ServingSetup(cfg=get_config("llama3.1-8b"), hw=TPU_V5E, chips=4)
+
+
+@pytest.fixture(scope="module")
+def chat_trace():
+    return make_trace(TraceConfig(arrival="poisson", rate=6.0,
+                                  horizon_s=20.0, seed=3))
+
+
+# ------------------------------------------------------------------- traces
+def test_trace_deterministic_and_pinned():
+    cfg = TraceConfig(arrival="poisson", rate=4.0, horizon_s=30.0, seed=123)
+    a, b = make_trace(cfg), make_trace(cfg)
+    np.testing.assert_array_equal(a.arrivals, b.arrivals)
+    np.testing.assert_array_equal(a.to_arrays()["ii"], b.to_arrays()["ii"])
+    np.testing.assert_array_equal(a.to_arrays()["oo"], b.to_arrays()["oo"])
+    # pin exact values: replayability must survive refactors
+    np.testing.assert_allclose(a.arrivals[:3],
+                               [0.14924312, 0.17850089, 0.24144956],
+                               atol=1e-6)
+    assert (a.requests[0].ii, a.requests[0].oo) == (209, 94)
+
+
+def test_arrival_processes_hit_their_rates():
+    rng = np.random.default_rng(0)
+    for gen, kw in ((poisson_arrivals, {}), (gamma_arrivals, {"cv": 2.0})):
+        t = gen(10.0, 200.0, rng, **kw)
+        assert abs(len(t) / 200.0 - 10.0) < 1.5
+        assert np.all(np.diff(t) >= 0) and t[-1] < 200.0
+    t = mmpp_arrivals(2.0, 20.0, 400.0, rng)
+    assert 2.0 * 400 < len(t) < 20.0 * 400
+    assert np.all(np.diff(t) >= 0)
+
+
+def test_mmpp_burstier_than_poisson():
+    rng1, rng2 = np.random.default_rng(1), np.random.default_rng(1)
+    po = poisson_arrivals(8.0, 300.0, rng1)
+    mm = mmpp_arrivals(2.0, 32.0, 300.0, rng2)
+    # dispersion of per-second counts: MMPP must exceed Poisson's ~1
+    def dispersion(t):
+        c = np.bincount(t.astype(int), minlength=300)[:300]
+        return c.var() / max(c.mean(), 1e-9)
+    assert dispersion(mm) > 2.0 * dispersion(po)
+
+
+def test_shape_mix_and_roundtrip():
+    tr = make_trace(TraceConfig(
+        rate=20.0, horizon_s=20.0, seed=5,
+        shape_mix=mix(("summarize", 0.5), ("generate", 0.5))))
+    arrs = tr.to_arrays()
+    assert len(arrs["ii"]) == len(tr) > 100
+    tr2 = Trace.from_arrays(**arrs, horizon_s=tr.horizon_s)
+    np.testing.assert_array_equal(tr2.arrivals, tr.arrivals)
+    # summarize: long prompts; generate: long outputs — both present
+    assert arrs["ii"].max() > 1500 and arrs["oo"].max() > 400
+    with pytest.raises(KeyError):
+        make_trace(TraceConfig(arrival="nope"))
+
+
+# ---------------------------------------------------------------- simulator
+def test_simulator_completes_and_orders_metrics(setup, chat_trace):
+    res = simulate(chat_trace, SimConfig(setup=setup, n_replicas=2))
+    assert len(res.records) == len(chat_trace)
+    assert len(res.completed) == len(chat_trace)
+    for r in res.completed:
+        assert r.arrival_s < r.first_token_s <= r.done_s
+        assert np.isfinite(r.tpot_s) and r.tpot_s >= 0.0
+    assert res.goodput_tok_s > 0 and res.n_events > len(chat_trace)
+    # replica integral covers the active span of both replicas
+    assert res.replica_seconds >= 2 * 0.9 * res.sim_end_s
+
+
+def test_simulator_deterministic(setup, chat_trace):
+    cfg = SimConfig(setup=setup, n_replicas=1)
+    a, b = simulate(chat_trace, cfg), simulate(chat_trace, cfg)
+    assert [r.done_s for r in a.records] == [r.done_s for r in b.records]
+    assert a.n_events == b.n_events
+
+
+def test_more_replicas_cut_ttft(setup, chat_trace):
+    cfg1 = SimConfig(setup=setup, n_replicas=1)
+    cfg3 = SimConfig(setup=setup, n_replicas=3)
+    r1, r3 = simulate(chat_trace, cfg1), simulate(chat_trace, cfg3)
+    assert r3.ttft_percentile(95) <= r1.ttft_percentile(95)
+    assert r3.slo_attainment(1.0) >= r1.slo_attainment(1.0)
+
+
+def test_kv_capacity_limits_concurrency(setup):
+    # tiny KV budget: only a few requests' worth of tokens fit at once
+    tr = make_trace(TraceConfig(arrival="poisson", rate=15.0,
+                                horizon_s=15.0, seed=3))
+    need = max(r.ii + r.oo for r in tr.requests)
+    tight = SimConfig(setup=setup, n_replicas=1, drain_s=5000.0,
+                      kv_capacity_override=2.0 * need)
+    free = SimConfig(setup=setup, n_replicas=1, drain_s=5000.0)
+    rt, rf = simulate(tr, tight), simulate(tr, free)
+    assert max(s.bb for s in rt.steps) < 0.5 * max(s.bb for s in rf.steps)
+    assert len(rt.completed) == len(tr)            # still drains fully
+
+
+def test_oversized_request_rejected_not_blocking(setup):
+    """A request that can never fit KV must not head-of-line block."""
+    tr = make_trace(TraceConfig(arrival="poisson", rate=4.0,
+                                horizon_s=10.0, seed=9))
+    arrs = tr.to_arrays()
+    arrs["ii"][3] = 10_000            # ii+oo far beyond the tiny budget
+    big = Trace.from_arrays(**arrs, horizon_s=tr.horizon_s)
+    cap = max(r.ii + r.oo for r in big.requests
+              if r.ii < 10_000) + 500.0
+    cfg = SimConfig(setup=setup, n_replicas=1, drain_s=5000.0,
+                    kv_capacity_override=cap)
+    res = simulate(big, cfg)
+    rejected = [r for r in res.records if r.ii >= 10_000]
+    assert len(rejected) == 1 and not rejected[0].completed
+    assert rejected[0].ttft_s == np.inf            # counted as SLO miss
+    assert len(res.completed) == len(big) - 1      # everyone else served
+
+
+def test_kv_capacity_tokens_profiles(setup):
+    cap = kv_capacity_tokens(setup)
+    assert 1e4 < cap < 1e7
+    ssm = ServingSetup(cfg=get_config("xlstm-125m"), hw=TPU_V5E, chips=4)
+    assert kv_capacity_tokens(ssm) == np.inf
+
+
+def test_group_step_times_reduce_to_classic(setup):
+    np.testing.assert_allclose(
+        prefill_step_time(setup, np.full(8, 512.0)),
+        prefill_time(setup, 512, 8))
+    np.testing.assert_allclose(
+        decode_step_time_group(setup, np.full(16, 900.0)),
+        decode_step_time(setup, 16, 900.0))
+    # heterogeneity matters: one long prompt costs more than its mean
+    assert prefill_step_time(setup, [128.0, 8192.0]) > \
+        prefill_step_time(setup, [4160.0, 4160.0])
+
+
+# --------------------------------------------------------------- autoscaler
+def _fit_ala(setup, sa_iters=4):
+    import itertools
+    from repro.core.annealing import SAConfig
+    rng = np.random.default_rng(0)
+    rows = [(ii, oo, bb, t)
+            for ii, oo, bb in itertools.product(
+                (128, 512, 2048), (64, 256), (1, 4, 16, 64))
+            for t in sample_throughput(setup, ii, oo, bb, 2, rng)]
+    gi, go, gb, gt = map(np.asarray, zip(*rows))
+    te = rng.random(len(gi)) < 0.3
+    ala = ALA()
+    ala.cfg.sa = SAConfig(n_iters=sa_iters, seed=0, n_chains=2,
+                          gbt_kw=dict(n_estimators=20, learning_rate=0.2,
+                                      max_depth=3))
+    ala.fit(gi[~te], go[~te], gb[~te], gt[~te])
+    ala.explore((gi[te], go[te], gb[te], gt[te]))
+    ala.fit_error()
+    return ala
+
+
+def test_ala_autoscaler_beats_static_on_burst(setup):
+    ala = _fit_ala(setup)
+    tr = make_trace(TraceConfig(arrival="mmpp", rate=4.0, burst_rate=24.0,
+                                horizon_s=25.0, seed=7))
+    cfg = SimConfig(setup=setup, n_replicas=1, max_replicas=6)
+    rs = simulate(tr, cfg, StaticPolicy(n_replicas=1, batch_cap=64))
+    pol = ALAAutoscaler(ala=ala, max_replicas=6)
+    ra = simulate(tr, cfg, pol)
+    assert ra.slo_attainment(2.0) >= rs.slo_attainment(2.0)
+    assert max(a.n_replicas for _, a in ra.controls) > 1   # it did scale
+    assert pol.log and all(0.0 <= c <= 1.0 for c, _, _ in pol.log)
+
+
+def test_autoscaler_degenerate_confidence_falls_back(setup):
+    ala = _fit_ala(setup)
+    pol = ALAAutoscaler(ala=ala)
+    pol._predict_per_replica = lambda ii, oo: (64, 5000.0, 0.0)
+    obs = Observation(now=2.0, window_s=2.0, n_arrivals=10, mean_ii=256.0,
+                      mean_oo=128.0, arrival_rate=5.0, queue_len=0,
+                      n_running=4, n_active_replicas=1, batch_cap=64,
+                      decode_tokens=2000, busy_s=2.0,
+                      measured_tok_s=1000.0)
+    act = pol.control(obs)
+    # supply = measured 1000 tok/s, demand = 640 tok/s / 0.75 -> 1 replica
+    assert act.n_replicas == 1
+    assert pol.log[-1][2] is True          # fallback taken
+    # idle window: hold steady, no divide-by-zero on empty stats
+    idle = Observation(now=4.0, window_s=2.0, n_arrivals=0, mean_ii=0.0,
+                       mean_oo=0.0, arrival_rate=0.0, queue_len=0,
+                       n_running=0, n_active_replicas=3, batch_cap=32,
+                       decode_tokens=0, busy_s=0.0, measured_tok_s=0.0)
+    assert pol.control(idle) == Action(n_replicas=3, batch_cap=32)
+
+
+# ------------------------------------------------------------------ adapter
+def test_adapter_windows_and_dataset(setup, chat_trace):
+    res = simulate(chat_trace, SimConfig(setup=setup, n_replicas=1))
+    wins = summarize_windows(res, window_s=2.5)
+    assert wins and all(w.thpt > 0 and w.bb >= 1 for w in wins)
+    assert all(w.ii & (w.ii - 1) == 0 for w in wins)   # pow2 buckets
+    ds = windows_to_dataset(res, setup, "llama3.1-8b", window_s=2.5)
+    assert set(ds.cols) == {"model", "acc", "acc_count", "back", "prec",
+                            "mode", "ii", "oo", "bb", "thpt"}
+    assert (ds["acc"] == "tpu-v5e").all() and (ds["acc_count"] == 4).all()
+
+
+def test_adapter_roundtrip_registry_fit(setup, chat_trace):
+    """Trace-derived rows feed the same Alg 4 fit path as static grids."""
+    res = simulate(chat_trace, SimConfig(setup=setup, n_replicas=1))
+    ds = windows_to_dataset(res, setup, "llama3.1-8b", window_s=2.5)
+    ds2 = Dataset.from_rows([
+        {k: ds[k][i] for k in ds.cols} for i in range(len(ds))])
+    np.testing.assert_array_equal(ds2["thpt"], ds["thpt"])
+    reg = ModelRegistry().fit(ds2, n_estimators=15)
+    assert len(reg.combos) == 1
+    pred = reg.predict(ds2)
+    assert np.isfinite(pred).all() and (pred > 0).all()
+
+
+def test_adapter_raises_on_no_steady_state(setup):
+    tr = make_trace(TraceConfig(rate=0.05, horizon_s=2.0, seed=1))
+    res = simulate(tr, SimConfig(setup=setup))
+    with pytest.raises(ValueError):
+        windows_to_dataset(res, setup, "llama3.1-8b", window_s=0.01,
+                           min_completions=50)
+    with pytest.raises(ValueError):
+        Dataset.from_rows([])
