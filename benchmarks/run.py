@@ -24,6 +24,12 @@ writes a JSON report to results/bench_report.json for EXPERIMENTS.md.
                             ALA-in-the-loop autoscaling vs the static-bb
                             baseline across >= 3 archs x arrival traces
                             (emits BENCH_serving.json; --smoke for CI)
+  online_engine           — epoch-by-epoch trace feed through the
+                            OnlineALA incremental-refit engine vs a
+                            from-scratch fit+fit_uncertainty on the
+                            concatenated data every epoch: prediction
+                            parity + speedup (emits BENCH_online.json;
+                            --smoke for CI)
   wallclock_engine        — real JAX engine sweep via bench.harness
                             (honors --grid-ii/--grid-oo/--grid-bb/--reps)
 
@@ -575,6 +581,178 @@ def serving_engine(smoke=None, ttft_slo_s: float = 2.0):
     return report
 
 
+def online_engine(smoke=None):
+    """Streaming ALA: an epoch-by-epoch trace feed through the
+    ``OnlineALA`` incremental-refit engine, against a from-scratch
+    ``ModelRegistry.fit`` + ``fit_uncertainty`` on the full concatenated
+    data every epoch.  Each epoch slices the arrival trace, simulates it
+    with the ALA autoscaler attached to the online engine (drift
+    evidence can force recalibration), adapts the steady-state windows
+    into a Dataset delta, and ingests it.  Records prediction parity
+    (incremental vs from-scratch must agree to <= 1e-6 on the serving
+    path) and the cumulative refit speedup.  Writes
+    results/BENCH_online.json."""
+    from repro.configs import get_config
+    from repro.core.annealing import SAConfig, median_ape
+    from repro.core.online import OnlineALA, OnlineConfig
+    from repro.core.registry import ModelRegistry
+    from repro.perfmodel.simulator import (ServingSetup, sample_throughput,
+                                           throughput)
+    from repro.perfmodel.tpu import TPU_V5E
+    from repro.serving.adapter import TRACE_BACKEND, windows_to_dataset
+    from repro.serving.autoscaler import ALAAutoscaler
+    from repro.serving.simulator import SimConfig, simulate
+    from repro.serving.traces import TraceConfig, make_trace, mix
+    from repro.core.dataset import Dataset
+
+    smoke = OPTS["smoke"] if smoke is None else smoke
+    archs = ("llama3.1-8b",) if smoke else ("llama3.1-8b", "qwen2.5-32b")
+    n_epochs = 3 if smoke else 8
+    epoch_s = 10.0 if smoke else 20.0
+    REF_II, REF_OO = 512, 192
+    grid = [(ii, oo, bb) for ii in ((128, 512, 2048) if smoke else
+                                    (128, 256, 512, 1024, 2048))
+            for oo in ((64, 256) if smoke else (64, 128, 256, 512))
+            for bb in ((1, 4, 16, 64) if smoke else
+                       (1, 2, 4, 8, 16, 32, 64, 128))]
+    sa = SAConfig(n_iters=8 if smoke else 20, n_chains=2, seed=0,
+                  gbt_kw=dict(n_estimators=20, learning_rate=0.2,
+                              max_depth=3))
+    gbt_kw = dict(n_estimators=20, learning_rate=0.15)
+    eng = OnlineALA(OnlineConfig(sa=sa, warm_iters=3 if smoke else 6,
+                                 gbt_kw=dict(sa.gbt_kw)))
+
+    setups, traces, scalers, combos = {}, {}, {}, {}
+    seed_rows = []
+    for arch in archs:
+        cfg = get_config(arch)
+        chips = 8 if cfg.param_count() > 1e10 else 4
+        setups[arch] = ServingSetup(cfg=cfg, hw=TPU_V5E, chips=chips)
+        rng = np.random.default_rng(0)
+        # calibration grid stamped onto the trace combination so epochs
+        # extend — not sit beside — the static seed fit
+        seed_rows += [dict(model=arch, acc=TPU_V5E.name, acc_count=chips,
+                           back=TRACE_BACKEND, prec="bf16", mode="serve",
+                           ii=ii, oo=oo, bb=bb, thpt=float(t))
+                      for ii, oo, bb in grid
+                      for t in sample_throughput(setups[arch], ii, oo, bb,
+                                                 2, rng)]
+        cap_req_s = throughput(setups[arch], REF_II, REF_OO, 64) / REF_OO
+        traces[arch] = make_trace(TraceConfig(
+            arrival="mmpp", rate=0.7 * cap_req_s,
+            burst_rate=2.0 * cap_req_s, horizon_s=n_epochs * epoch_s,
+            shape_mix=mix(("chat", 0.7), ("generate", 0.3)), seed=29))
+
+    # untimed warmup: run both pipelines once on the seed data so the
+    # jitted shape buckets are compiled before either side is timed
+    # (otherwise whichever path runs first is charged XLA compile time)
+    seed_ds = Dataset.from_rows(seed_rows)
+    warm = OnlineALA(OnlineConfig(sa=sa, warm_iters=3,
+                                  gbt_kw=dict(sa.gbt_kw)))
+    warm.ingest(seed_ds, **gbt_kw)
+    ModelRegistry().fit(seed_ds, **gbt_kw).fit_uncertainty(
+        seed_ds, seed=0, sa_cfg=sa, **sa.gbt_kw)
+
+    # epoch 0: ingest the seed grids (initial full-budget fits)
+    rep0, us0 = _timed(eng.ingest, seed_ds, **gbt_kw)
+    inc_wall = us0 / 1e6
+    for arch in archs:
+        combos[arch] = eng.combo_of(next(r for r in seed_rows
+                                         if r["model"] == arch))
+        scalers[arch] = ALAAutoscaler(ala=eng.ala_for(combos[arch]),
+                                     online=eng, combo=combos[arch],
+                                     max_replicas=4)
+
+    def scratch_fit():
+        full = eng.full_data()
+        reg = ModelRegistry().fit(full, **gbt_kw)
+        reg.fit_uncertainty(full, seed=0, sa_cfg=sa, **sa.gbt_kw)
+        return reg, full
+
+    (reg_s, full), us_s = _timed(scratch_fit)
+    scratch_wall = us_s / 1e6
+    epochs_out = [{"epoch": 0, "rows": len(seed_ds),
+                   "incremental_s": inc_wall, "scratch_s": scratch_wall,
+                   "refit": len(rep0.refit), "skipped": len(rep0.skipped),
+                   "drifted": 0}]
+    inc_refit = scratch_refit = 0.0     # epochs >= 1: the refit loop
+
+    for e in range(n_epochs):
+        deltas = []
+        # epochs alternate which arch serves, so "refit only what
+        # changed" has something to skip in the multi-arch run
+        serving = [archs[e % len(archs)]] if len(archs) > 1 else archs
+        for arch in serving:
+            tr = traces[arch].slice(e * epoch_s, (e + 1) * epoch_s)
+            if not len(tr):
+                continue
+            res = simulate(tr, SimConfig(setup=setups[arch], batch_cap=64,
+                                         n_replicas=1, max_replicas=4,
+                                         t_start=e * epoch_s),
+                           scalers[arch])
+            try:
+                deltas.append(windows_to_dataset(
+                    res, setups[arch], arch,
+                    window_s=epoch_s / (4.0 if smoke else 8.0)))
+            except ValueError:
+                continue          # no steady-state window this epoch
+        if not deltas:
+            continue
+        delta = deltas[0]
+        for d in deltas[1:]:
+            delta = delta.concat(d)
+        rep, us_i = _timed(eng.ingest, delta, **gbt_kw)
+        (reg_s, full), us_s = _timed(scratch_fit)
+        inc_wall += us_i / 1e6
+        scratch_wall += us_s / 1e6
+        inc_refit += us_i / 1e6
+        scratch_refit += us_s / 1e6
+        epochs_out.append({
+            "epoch": e + 1, "rows": len(delta),
+            "incremental_s": us_i / 1e6, "scratch_s": us_s / 1e6,
+            "refit": len(rep.refit),
+            "skipped": len(rep.skipped),
+            "drifted": sum(1 for d in rep.drift.values() if d.drifted)})
+
+    # parity on the serving path over every ingested row
+    p_inc = eng.predict(full)
+    p_scr = reg_s.predict(full)
+    parity = float(np.abs(p_inc - p_scr).max())
+    med_inc = median_ape(full["thpt"].astype(np.float64), p_inc)
+    med_scr = median_ape(full["thpt"].astype(np.float64), p_scr)
+    _, _, conf_inc = eng.estimate(full, backend="numpy")
+    speedup = scratch_wall / max(inc_wall, 1e-9)
+    # epoch 0 is an identical full fit on both sides; the refit speedup
+    # over epochs >= 1 is the number the online engine is for
+    refit_speedup = scratch_refit / max(inc_refit, 1e-9)
+    out = {
+        "smoke": bool(smoke), "archs": list(archs), "n_epochs": n_epochs,
+        "rows_total": len(full),
+        "incremental_wall_s": inc_wall, "scratch_wall_s": scratch_wall,
+        "speedup": speedup,
+        "incremental_refit_s": inc_refit, "scratch_refit_s": scratch_refit,
+        "refit_speedup": refit_speedup,
+        "predict_parity_max_abs_diff": parity,
+        "parity_ok": bool(parity <= 1e-6),
+        "median_ape_incremental": med_inc,
+        "median_ape_scratch": med_scr,
+        "mean_confidence_incremental": float(np.mean(conf_inc)),
+        "recalibration_requests": sum(len(s.recalibrations)
+                                      for s in scalers.values()),
+        "epochs": epochs_out,
+    }
+    key = "online_engine_smoke" if smoke else "online_engine"
+    REPORT[key] = out
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"BENCH_online{'_smoke' if smoke else ''}.json").write_text(
+        json.dumps(out, indent=1))
+    _emit("online_engine_incremental", inc_refit * 1e6,
+          f"medAPE={med_inc:.2f}%;parity={parity:.2e}")
+    _emit("online_engine_scratch", scratch_refit * 1e6,
+          f"medAPE={med_scr:.2f}%;refit_speedup={refit_speedup:.1f}x")
+    return out
+
+
 def wallclock_engine(arch: str = "qwen3-0.6b"):
     """Real JAX-engine sweep through bench.harness — the CLI grid/reps
     overrides and the module defaults share one code path."""
@@ -653,6 +831,7 @@ BENCHMARKS.update({
     "sa_engine": sa_engine,
     "uncertainty_engine": uncertainty_engine,
     "serving_engine": serving_engine,
+    "online_engine": online_engine,
     "wallclock_engine": wallclock_engine,
 })
 

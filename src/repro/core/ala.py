@@ -21,7 +21,8 @@ import numpy as np
 
 from repro.core import annealing
 from repro.core.annealing import SAConfig, SALog, Subset, median_ape
-from repro.core.database import ExpDatabase, build_exponential_database
+from repro.core.database import (ExpDatabase, build_exponential_database,
+                                 update_exponential_database)
 from repro.core.error_predictor import predict_error, train_error_predictor
 from repro.core.gbt import GBTRegressor, MultiOutputGBT
 from repro.core.predictor import predict_throughput, train_param_predictor
@@ -94,10 +95,21 @@ class ALA:
         return self.sa_log
 
     # -- Alg 7 ----------------------------------------------------------------
-    def fit_error(self, **gbt_kw) -> GBTRegressor:
+    def fit_error(self, max_subsets: Optional[int] = None,
+                  **gbt_kw) -> GBTRegressor:
+        """Train the Alg 7 error predictor on the SA log.
+
+        ``max_subsets`` trains on only the trailing window of the log —
+        the online refit path uses the bank's window so the per-epoch
+        cost stays bounded as merged logs grow across epochs."""
         assert self.sa_log is not None, "explore() first"
         t0 = time.perf_counter()
-        self.error_model = train_error_predictor(self.sa_log, **gbt_kw)
+        log = self.sa_log
+        if max_subsets is not None and len(log.subsets) > max_subsets:
+            log = dataclasses.replace(log,
+                                      subsets=log.subsets[-max_subsets:],
+                                      errors=log.errors[-max_subsets:])
+        self.error_model = train_error_predictor(log, **gbt_kw)
         self.timings["fit_error_s"] = time.perf_counter() - t0
         return self.error_model
 
@@ -118,6 +130,84 @@ class ALA:
             self._bank = build_subset_bank(self._train, self.sa_log,
                                            max_subsets=self._bank_subsets)
         return self._bank
+
+    # -- online incremental refit --------------------------------------------
+    def refit(self, train, test, n_iters: Optional[int] = None,
+              n_chains: Optional[int] = None) -> SALog:
+        """Incremental re-fit after the training data changed (typically
+        rows appended by an online epoch — see ``repro.core.online``).
+
+        When the new data is an append of the old (prefix-equal), every
+        stage updates incrementally: the Alg 2 database re-solves only
+        the delta-touched (ii, oo) groups
+        (``update_exponential_database``), the SA chains warm start from
+        the previous log's ``best_subset`` with a short budget
+        (``n_iters``, default ``cfg.sa.n_iters``) and merge their
+        proposals into the growing log, the Alg 7 error model retrains
+        on the merged log, and the Alg 8 bank extends additively under
+        the original fixed-bin contract (``uncertainty.extend_bank``).
+        Non-appended data falls back to full rebuilds of the database
+        and bank (the SA warm start still applies).
+        """
+        assert self.sa_log is not None, "fit() + explore() first"
+        prev_train = self._train
+        prev_log = self.sa_log
+        prev_bank, prev_bank_subsets = self._bank, self._bank_subsets
+        prev_best = prev_log.best_subset
+
+        new_train = tuple(np.asarray(v, np.float64) for v in train)
+        n_old = len(prev_train[0]) if prev_train is not None else -1
+        appended = (prev_train is not None
+                    and len(new_train[0]) >= n_old
+                    and all(np.array_equal(p, c[:n_old])
+                            for p, c in zip(prev_train, new_train)))
+        if appended and self.db is not None:
+            # Alg 2 incrementally: only delta-touched (ii, oo) groups
+            # re-solve; untouched groups reuse their params verbatim
+            t0 = time.perf_counter()
+            self._train = new_train
+            self._bank = None
+            self.db = update_exponential_database(
+                self.db, *new_train, n_delta=len(new_train[0]) - n_old)
+            t1 = time.perf_counter()
+            self.predictor = (train_param_predictor(self.db.training,
+                                                    **self.cfg.gbt_kw)
+                              if self.db is not None
+                              and len(self.db.training) >= 4 else None)
+            self.timings.update(fit_db_s=t1 - t0,
+                                fit_predictor_s=time.perf_counter() - t1)
+        else:
+            self.fit(*train)
+        t0 = time.perf_counter()
+        cfg = self.cfg.sa
+        k = cfg.n_chains if n_chains is None else n_chains
+        cfg = dataclasses.replace(
+            cfg, n_iters=cfg.n_iters if n_iters is None else n_iters,
+            n_chains=k)
+        if k > 1:
+            new_log = annealing.anneal_batched(self._train, test, cfg,
+                                               initial=prev_best)
+        else:
+            new_log = annealing.anneal(self._train, test, cfg,
+                                       initial=prev_best)
+        self.sa_log = annealing.merge_logs(prev_log, new_log)
+        self.timings["refit_explore_s"] = time.perf_counter() - t0
+        # trailing window keeps the per-epoch Alg 7 cost bounded as the
+        # merged log grows (same window the bank reduces over)
+        self.fit_error(max_subsets=prev_bank_subsets
+                       or uncertainty.DEFAULT_MAX_SUBSETS)
+
+        if prev_bank is not None and appended:
+            t0 = time.perf_counter()
+            self._bank_subsets = (prev_bank_subsets
+                                  or uncertainty.DEFAULT_MAX_SUBSETS)
+            self._bank = uncertainty.extend_bank(
+                prev_bank, self._train, len(self._train[0]) - n_old,
+                new_log.subsets, self.sa_log.universes,
+                max_subsets=self._bank_subsets)
+            self.timings["refit_bank_s"] = time.perf_counter() - t0
+        # else: self.fit already cleared the bank -> lazy full rebuild
+        return self.sa_log
 
     def _fill_thpt(self, q) -> Tuple[np.ndarray, ...]:
         """Replace non-finite throughputs with ALA's own predictions —

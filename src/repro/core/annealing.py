@@ -62,6 +62,29 @@ class SALog:
         return batch_subset_masks(ii, oo, bb, self.subsets, self.universes)
 
 
+def merge_logs(old: SALog, new: SALog) -> SALog:
+    """Append ``new``'s proposals to ``old``'s — one growing log across
+    online data epochs.
+
+    Universes take the per-dimension union (appended data can introduce
+    new unique values; old subsets stay valid as partial selections of
+    the wider universe).  ``best_subset``/``best_error`` come from
+    ``new``: errors from different epochs are measured against different
+    evaluation sets, so only the freshest epoch's optimum is the state a
+    warm start should chain from.  The merged subset/error lists feed
+    the Alg 7 error predictor and the Alg 8 bank window as usual.
+    """
+    universes = {k: np.unique(np.concatenate(
+        [np.asarray(old.universes[k], np.float64),
+         np.asarray(new.universes[k], np.float64)]))
+        for k in new.universes}
+    return SALog(subsets=list(old.subsets) + list(new.subsets),
+                 errors=list(old.errors) + list(new.errors),
+                 universes=universes,
+                 best_subset=dict(new.best_subset),
+                 best_error=float(new.best_error))
+
+
 def median_ape(y_true: np.ndarray, y_pred: np.ndarray) -> float:
     """Median absolute percentage error (the paper's headline metric)."""
     denom = np.maximum(np.abs(y_true), 1e-9)

@@ -64,6 +64,76 @@ def build_exponential_database(ii, oo, bb, thpt,
     return ExpDatabase(params=params, training=np.asarray(training))
 
 
+def update_exponential_database(prev: Optional[ExpDatabase],
+                                ii, oo, bb, thpt, n_delta: int,
+                                min_points: int = 1
+                                ) -> Optional[ExpDatabase]:
+    """Incremental Alg 2 after ``n_delta`` rows were *appended*.
+
+    The vmapped LM fit is per-group independent (zero-weight padding
+    rows contribute exact zeros), so only the (ii, oo) groups the delta
+    touches need a refit — over their full rows, since an LM solve is
+    not additive — and every untouched group's params are reused as-is.
+    Output ordering (params insertion, training rows) follows the same
+    lexicographic ``np.unique`` order as ``build_exponential_database``,
+    so downstream predictor training sees identically-ordered input.
+    ``prev=None`` (or a non-appended history) falls back to the full
+    build.
+    """
+    if prev is None or n_delta >= len(np.atleast_1d(ii)):
+        return build_exponential_database(ii, oo, bb, thpt,
+                                          min_points=min_points)
+    ii = np.asarray(ii, np.float64)
+    oo = np.asarray(oo, np.float64)
+    bb = np.asarray(bb, np.float64)
+    thpt = np.asarray(thpt, np.float64)
+    n_old = len(ii) - int(n_delta)
+    touched = {(float(a), float(b))
+               for a, b in zip(ii[n_old:], oo[n_old:])}
+
+    keys = np.stack([ii, oo], axis=1)
+    uniq, inv = np.unique(keys, axis=0, return_inverse=True)
+    counts = np.bincount(inv, minlength=len(uniq))
+    groups, kept = [], []
+    for g in range(len(uniq)):
+        key = (float(uniq[g, 0]), float(uniq[g, 1]))
+        if key not in touched:
+            continue
+        rows = inv == g
+        if rows.sum() < min_points:
+            continue
+        gb, gt = bb[rows], thpt[rows]
+        groups.append((gb, gt, initial_params(gb, gt)))
+        kept.append(g)
+    # pad to the full batch's max group size — zero-weight rows keep the
+    # float32 reduction order of the full build, so the subset solve is
+    # bit-identical to the fit a from-scratch build would produce
+    # (fit_exponential_groups also pads the group dim to >= 2: a batch
+    # of one fuses differently under XLA)
+    theta_new = (fit_exponential_groups(groups,
+                                        pad_to=int(counts.max()))[:len(kept)]
+                 if groups else np.zeros((0, 3)))
+    refit = {kept[j]: theta_new[j] for j in range(len(kept))}
+
+    params: Dict[Tuple[float, float], np.ndarray] = {}
+    training = []
+    for g in range(len(uniq)):
+        key = (float(uniq[g, 0]), float(uniq[g, 1]))
+        if key in touched:
+            th = refit.get(g)
+            if th is None or not np.all(np.isfinite(th)):
+                continue              # same drop rules as the full build
+        else:
+            th = prev.params.get(key)
+            if th is None:            # previously dropped; rows unchanged
+                continue
+        params[key] = th
+        training.append([key[0], key[1], th[0], th[1], th[2]])
+    if not training:
+        return None
+    return ExpDatabase(params=params, training=np.asarray(training))
+
+
 @dataclasses.dataclass
 class GroupStructure:
     """Precomputed (ii, oo) group rectangles for repeated masked fits.

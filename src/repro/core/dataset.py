@@ -37,8 +37,33 @@ class Dataset:
         return self[mask]
 
     def concat(self, other: "Dataset") -> "Dataset":
-        return Dataset({k: np.concatenate([self.cols[k], other.cols[k]])
-                        for k in self.cols})
+        """Row-wise concatenation of two schema-compatible datasets.
+
+        Both sides must carry exactly the same columns — a mismatch
+        raises ``ValueError`` naming the offending columns instead of
+        silently dropping data (columns only in ``other``) or dying in a
+        bare ``KeyError`` (columns only in ``self``).  Dtype promotion
+        is deterministic: if either side of a column is string-like
+        (``U``/``S``/``O`` kinds) both sides are cast to ``str`` before
+        concatenating; purely numeric columns follow numpy's standard
+        promotion (e.g. int64 + float64 -> float64).
+        """
+        missing = sorted(set(self.cols) - set(other.cols))
+        extra = sorted(set(other.cols) - set(self.cols))
+        if missing or extra:
+            parts = []
+            if missing:
+                parts.append(f"columns {missing} missing from other")
+            if extra:
+                parts.append(f"columns {extra} only in other")
+            raise ValueError("concat schema mismatch: " + "; ".join(parts))
+        out = {}
+        for k, a in self.cols.items():
+            b = other.cols[k]
+            if (a.dtype.kind in "USO") != (b.dtype.kind in "USO"):
+                a, b = a.astype(str), b.astype(str)
+            out[k] = np.concatenate([a, b])
+        return Dataset(out)
 
     def unique_combos(self, keys: Sequence[str]) -> List[Tuple]:
         arr = np.stack([self.cols[k].astype(str) for k in keys], axis=1)
@@ -81,5 +106,18 @@ class Dataset:
         if not rows:
             raise ValueError("from_rows needs at least one row (the "
                              "column schema comes from the first row)")
-        keys = rows[0].keys()
+        keys = list(rows[0].keys())
+        keyset = set(keys)
+        for i, r in enumerate(rows):
+            rk = set(r.keys())
+            if rk != keyset:
+                missing = sorted(keyset - rk)
+                extra = sorted(rk - keyset)
+                parts = []
+                if missing:
+                    parts.append(f"missing keys {missing}")
+                if extra:
+                    parts.append(f"unexpected keys {extra}")
+                raise ValueError(f"from_rows: row {i} does not match the "
+                                 f"row-0 schema: " + ", ".join(parts))
         return cls({k: np.asarray([r[k] for r in rows]) for k in keys})

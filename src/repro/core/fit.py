@@ -28,6 +28,31 @@ def _residuals(theta, x, y, w):
     return (pred - y) * w
 
 
+def _solve3(A, b):
+    """Closed-form 3x3 solve (adjugate / Cramer).
+
+    Elementwise arithmetic only, so — unlike ``jnp.linalg.solve``, whose
+    batched LU kernel rounds differently for different batch sizes — the
+    result for one system is bit-identical whatever else shares the
+    vmapped batch.  That invariance is what lets the incremental
+    database refit (``update_exponential_database``) reproduce the full
+    fit exactly while solving only a subset of the groups.
+    """
+    c00 = A[1, 1] * A[2, 2] - A[1, 2] * A[2, 1]
+    c01 = A[1, 2] * A[2, 0] - A[1, 0] * A[2, 2]
+    c02 = A[1, 0] * A[2, 1] - A[1, 1] * A[2, 0]
+    det = A[0, 0] * c00 + A[0, 1] * c01 + A[0, 2] * c02
+    c10 = A[0, 2] * A[2, 1] - A[0, 1] * A[2, 2]
+    c11 = A[0, 0] * A[2, 2] - A[0, 2] * A[2, 0]
+    c12 = A[0, 1] * A[2, 0] - A[0, 0] * A[2, 1]
+    c20 = A[0, 1] * A[1, 2] - A[0, 2] * A[1, 1]
+    c21 = A[0, 2] * A[1, 0] - A[0, 0] * A[1, 2]
+    c22 = A[0, 0] * A[1, 1] - A[0, 1] * A[1, 0]
+    adj = jnp.array([[c00, c10, c20], [c01, c11, c21], [c02, c12, c22]])
+    safe = jnp.where(det == 0, 1.0, det)
+    return jnp.where(det == 0, jnp.zeros(3), (adj @ b) / safe)
+
+
 def _lm_step(theta, mu, x, y, w):
     r = _residuals(theta, x, y, w)
     # analytic Jacobian of residuals wrt (a, b, c)
@@ -40,7 +65,7 @@ def _lm_step(theta, mu, x, y, w):
 
     def solve(m):
         A = JtJ + m * jnp.eye(3, dtype=JtJ.dtype)
-        return jnp.linalg.solve(A, -Jtr)
+        return _solve3(A, -Jtr)
 
     delta = solve(mu)
     new_theta = theta + delta
@@ -73,20 +98,38 @@ def _fit_one(theta0, x, y, w):
 _fit_batch = jax.jit(jax.vmap(_fit_one))
 
 
-def fit_exponential_groups(groups):
+def _pow2(n: int, lo: int = 1) -> int:
+    """Next power of two >= n — the shape-bucketing the solvers use so
+    growing online datasets reuse compiles instead of triggering a fresh
+    XLA build every epoch."""
+    return max(lo, 1 << max(int(n) - 1, 0).bit_length())
+
+
+def fit_exponential_groups(groups, pad_to: int = 0):
     """Fit (a,b,c) for a list of (bb, thpt, theta0) ragged groups.
 
     Returns (G, 3) float64 array.  Groups are padded to the max length and
     solved in one vmapped LM call.
+
+    Shapes are bucketed: the group dimension pads to the next power of
+    two with all-zero dummy groups (bit-exact no-ops — the per-group
+    solve is batch-invariant, see ``_solve3``) and the row dimension to
+    the next power of two above ``max(group sizes, pad_to)``, so
+    repeated fits over growing data hit the jit cache instead of
+    recompiling.  ``pad_to`` additionally lets an incremental refit of a
+    *subset* of groups (``update_exponential_database``) reproduce the
+    full batch's row padding — and therefore its float32 reduction order
+    — bit-for-bit.
     """
     if not groups:
         return np.zeros((0, 3))
-    maxn = max(len(g[0]) for g in groups)
+    maxn = _pow2(max(max(len(g[0]) for g in groups), pad_to, 1))
     G = len(groups)
-    X = np.zeros((G, maxn), np.float32)
-    Y = np.zeros((G, maxn), np.float32)
-    W = np.zeros((G, maxn), np.float32)
-    T0 = np.zeros((G, 3), np.float32)
+    Gp = _pow2(G, lo=2)     # lo=2: a batch of one fuses differently
+    X = np.zeros((Gp, maxn), np.float32)
+    Y = np.zeros((Gp, maxn), np.float32)
+    W = np.zeros((Gp, maxn), np.float32)
+    T0 = np.zeros((Gp, 3), np.float32)
     scale = np.zeros(G, np.float64)
     for i, (bb, thpt, theta0) in enumerate(groups):
         n = len(bb)
@@ -99,7 +142,7 @@ def fit_exponential_groups(groups):
         scale[i] = s
     theta = np.asarray(_fit_batch(jnp.asarray(T0), jnp.asarray(X),
                                   jnp.asarray(Y), jnp.asarray(W)),
-                       np.float64)
+                       np.float64)[:G]
     theta[:, 0] *= scale
     theta[:, 2] *= scale
     return theta
@@ -117,17 +160,30 @@ def fit_exponential_masked(theta0, X, Y, W):
     step (J = 0 => delta = 0), returning theta0 for the caller to mask.
 
     theta0: (G, 3); X/Y/W: (G, maxn).  Returns float64 (G, 3).
+
+    Both dimensions bucket to powers of two (all-zero padding, exact
+    no-ops) before the jitted solve, so SA evaluators over growing
+    online datasets reuse the compiled kernel across epochs.
     """
     X = np.asarray(X, np.float64)
     Y = np.asarray(Y, np.float64)
     W = np.asarray(W, np.float64)
+    G, maxn = X.shape
     s = np.maximum(np.max(np.abs(Y) * (W > 0), axis=1), 1e-9)
     T0 = np.asarray(theta0, np.float64) \
         * np.stack([1.0 / s, np.ones_like(s), 1.0 / s], axis=1)
-    theta = np.asarray(_fit_batch(jnp.asarray(T0, jnp.float32),
-                                  jnp.asarray(X, jnp.float32),
-                                  jnp.asarray(Y / s[:, None], jnp.float32),
-                                  jnp.asarray(W, jnp.float32)), np.float64)
+    Gp, Mp = _pow2(G, lo=2), _pow2(maxn)
+    T0p = np.zeros((Gp, 3), np.float32)
+    Xp = np.zeros((Gp, Mp), np.float32)
+    Yp = np.zeros((Gp, Mp), np.float32)
+    Wp = np.zeros((Gp, Mp), np.float32)
+    T0p[:G] = T0
+    Xp[:G, :maxn] = X
+    Yp[:G, :maxn] = Y / s[:, None]
+    Wp[:G, :maxn] = W
+    theta = np.asarray(_fit_batch(jnp.asarray(T0p), jnp.asarray(Xp),
+                                  jnp.asarray(Yp), jnp.asarray(Wp)),
+                       np.float64)[:G]
     theta[:, 0] *= s
     theta[:, 2] *= s
     return theta

@@ -380,12 +380,21 @@ class PackedForest:
         return bins
 
     def predict(self, X: np.ndarray, backend: str = "jax") -> np.ndarray:
-        """X: (C, m, f) -> (C, m, O) predictions."""
+        """X: (C, m, f) -> (C, m, O) predictions.
+
+        The jax path pads the row dimension to a power of two before the
+        jitted traversal (per-row gathers, so padding is exact) — query
+        counts that grow over online epochs reuse the compiled kernel."""
         bins = self.transform_bins(np.asarray(X, np.float64))
         if backend == "jax":
+            from repro.core.fit import _pow2
+            m = bins.shape[1]
+            mp = _pow2(m, lo=8)
+            if mp != m:
+                bins = np.pad(bins, [(0, 0), (0, mp - m), (0, 0)])
             leaf = np.asarray(_forest_apply_jax(
                 self.feature, self.threshold, self.left, self.right,
-                self.value, bins, self.max_depth), np.float64)
+                self.value, bins, self.max_depth), np.float64)[..., :m]
         else:
             leaf = self._apply_numpy(bins)
         out = self.base[:, :, None] + self.learning_rate * leaf.sum(axis=2)

@@ -24,7 +24,8 @@ from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.database import ExpDatabase, build_exponential_database
+from repro.core.database import (ExpDatabase, build_exponential_database,
+                                 update_exponential_database)
 from repro.core.dataset import Dataset
 from repro.core.gbt import MultiOutputGBT
 from repro.core.predictor import predict_throughput, train_param_predictor
@@ -56,15 +57,15 @@ class ModelRegistry:
                 if db is not None and len(db.training) >= 4 else None)
         return ComboModel(db=db, predictor=pred)
 
-    def fit(self, data: Dataset, **gbt_kw) -> "ModelRegistry":
-        keys = [k for k in self.keys if k in data.cols]
-        self._active_keys = tuple(keys)
-        combos = sorted(data.unique_combos(keys))
+    def _fit_combos(self, data: Dataset, combos, keys, gbt_kw) -> None:
         jobs = []
         for combo in combos:
             sub = data
             for k, v in zip(keys, combo):
                 sub = sub.mask(sub[k].astype(str) == v)
+            if len(sub) == 0:
+                raise ValueError(f"no rows for combination {combo!r} in "
+                                 "the given dataset")
             jobs.append((sub.workload, gbt_kw))
         workers = self.n_workers or min(8, max(1, (os.cpu_count() or 1)))
         if workers > 1 and len(jobs) > 1:
@@ -75,7 +76,83 @@ class ModelRegistry:
         # insertion in sorted combo order keeps iteration deterministic
         for combo, cm in zip(combos, fitted):
             self.combos[combo] = cm
+
+    def fit(self, data: Dataset, **gbt_kw) -> "ModelRegistry":
+        """Full Alg 4 fit.  Always starts from a clean slate: any state
+        from a previous ``fit`` — including combinations absent from the
+        new data and their stale ``ala`` uncertainty fits — is dropped,
+        so ``predict``/``estimate`` never silently serve models trained
+        on data this registry no longer represents.  Use ``refit`` to
+        update a subset of combinations in place."""
+        self.combos = {}
+        keys = [k for k in self.keys if k in data.cols]
+        self._active_keys = tuple(keys)
+        self._fit_combos(data, sorted(data.unique_combos(keys)), keys,
+                         gbt_kw)
         return self
+
+    def refit(self, data: Dataset, combos: Optional[Sequence[Tuple]] = None,
+              **gbt_kw) -> "ModelRegistry":
+        """Incremental Alg 4: (re)fit only the given combinations,
+        leaving every other fitted combination untouched.
+
+        ``data`` must contain the *full* accumulated rows for each
+        target combination (an exponential fit is not additive, so a
+        changed combination rebuilds from all of its rows — the
+        incrementality is across combinations).  ``combos=None`` targets
+        every combination present in ``data``.  A refitted combination's
+        ``ala`` uncertainty fit is dropped — its data changed, so the
+        old SA log / error model / bank no longer describe it; callers
+        running the online pipeline re-attach a fresh one via
+        ``attach_ala`` (see ``repro.core.online.OnlineALA``).
+        """
+        keys = [k for k in self.keys if k in data.cols]
+        if self.combos and tuple(keys) != self._active_keys:
+            raise ValueError(f"refit key columns {tuple(keys)} != the "
+                             f"fitted registry's {self._active_keys}")
+        self._active_keys = tuple(keys)
+        present = sorted(data.unique_combos(keys))
+        if combos is None:
+            targets = present
+        else:
+            targets = sorted(tuple(str(v) for v in c) for c in combos)
+            present_set = set(present)
+            unknown = [c for c in targets if c not in present_set]
+            if unknown:
+                raise ValueError(f"refit: no rows in data for "
+                                 f"combinations {unknown}")
+        self._fit_combos(data, targets, keys, gbt_kw)
+        return self
+
+    def update_combo(self, combo: Tuple, workload, n_delta: int,
+                     **gbt_kw) -> None:
+        """Append-only incremental update of one fitted combination.
+
+        ``workload`` is the combination's *full* (ii, oo, bb, thpt) with
+        its last ``n_delta`` rows newly appended.  Only the (ii, oo)
+        groups the delta touches re-solve (``update_exponential_database``
+        — untouched group params are reused verbatim); the Alg 3
+        predictor retrains on the updated training table.  The stale
+        ``ala`` is dropped, same contract as ``refit``."""
+        combo = tuple(str(v) for v in combo)
+        cm = self.combos.get(combo)
+        if cm is None:
+            raise KeyError(f"unknown combination {combo!r}; "
+                           "fit()/refit() it first")
+        db = update_exponential_database(cm.db, *workload, n_delta=n_delta)
+        pred = (train_param_predictor(db.training, **gbt_kw)
+                if db is not None and len(db.training) >= 4 else None)
+        self.combos[combo] = ComboModel(db=db, predictor=pred)
+
+    def attach_ala(self, combo: Tuple, ala) -> None:
+        """Bind an uncertainty fit to an already-fitted combination so
+        ``estimate`` serves it (the online engine's re-attachment hook)."""
+        combo = tuple(str(v) for v in combo)
+        cm = self.combos.get(combo)
+        if cm is None:
+            raise KeyError(f"unknown combination {combo!r}; "
+                           "fit()/refit() it first")
+        self.combos[combo] = dataclasses.replace(cm, ala=ala)
 
     def _key_of(self, row: Dict) -> Tuple:
         return tuple(str(row[k]) for k in self._active_keys)

@@ -35,6 +35,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.annealing import SALog, Subset, batch_subset_masks, subset_mask
+from repro.core.fit import _pow2 as _pad_pow2
 
 N_HIST_BINS = 16
 FEATS = ("ii", "oo", "bb", "thpt")
@@ -202,45 +203,128 @@ def _count_hist(vals: np.ndarray, inner_f32: np.ndarray,
     return np.bincount(bins, w, minlength=n_bins).astype(np.float64)
 
 
-def build_subset_bank(train, log: SALog,
-                      max_subsets: Optional[int] = DEFAULT_MAX_SUBSETS,
-                      n_bins: int = N_HIST_BINS) -> SubsetBank:
-    """Materialize the SA log into fixed-shape arrays, once.
-
-    Row masks come from one vectorized membership pass
-    (``batch_subset_masks``); per-subset histograms are a single
-    (S, n) @ (n, B) matmul per feature (exact integer counts in
-    float64).
-    """
-    ii, oo, bb, thpt = (np.asarray(v, np.float64) for v in train)
-    subsets = list(log.subsets[-max_subsets:] if max_subsets
-                   else log.subsets)
-    masks = batch_subset_masks(ii, oo, bb, subsets, log.universes)
-    inner = _bank_edges((ii, oo, bb, thpt), n_bins)
-
-    S, n = masks.shape
-    hist = np.zeros((S, len(FEATS), n_bins), np.float64)
-    cols = (ii, oo, bb, thpt)
-    masks_f = masks.astype(np.float64)
-    for fi, col in enumerate(cols):
-        finite = np.isfinite(col)
-        bins = _bucketize(np.where(finite, col, 0.0), inner[fi])
-        onehot = np.zeros((n, n_bins), np.float64)
-        onehot[np.arange(n)[finite], bins[finite]] = 1.0
-        hist[:, fi, :] = masks_f @ onehot
-
+def _finalize_bank(inner, hist, masks, subsets, universes,
+                   n_bins: int) -> SubsetBank:
+    """L2-normalize + validity flags — shared bank assembly tail."""
     nrm = np.linalg.norm(hist, axis=2, keepdims=True)
     unit = (hist / np.maximum(nrm, 1e-30)).astype(np.float32)
     valid = masks.sum(axis=1) >= MIN_SUBSET_ROWS
     return SubsetBank(inner_edges=inner, hist=hist, unit=unit, valid=valid,
                       masks=masks, subsets=subsets,
                       universes={k: np.asarray(v)
-                                 for k, v in log.universes.items()},
+                                 for k, v in universes.items()},
                       n_bins=n_bins)
 
 
-def _pad_pow2(x: int, lo: int) -> int:
-    return max(lo, 1 << int(np.ceil(np.log2(max(x, 1)))))
+def _onehot_bins(cols, inner: np.ndarray, n_bins: int) -> np.ndarray:
+    """(4, n, B) one-hot bin assignment of the rows under fixed edges
+    (non-finite values carry no mass)."""
+    n = len(cols[0])
+    out = np.zeros((len(FEATS), n, n_bins), np.float64)
+    for fi, col in enumerate(cols):
+        finite = np.isfinite(col)
+        bins = _bucketize(np.where(finite, col, 0.0), inner[fi])
+        out[fi, np.arange(n)[finite], bins[finite]] = 1.0
+    return out
+
+
+def build_subset_bank(train, log: SALog,
+                      max_subsets: Optional[int] = DEFAULT_MAX_SUBSETS,
+                      n_bins: int = N_HIST_BINS,
+                      inner_edges: Optional[np.ndarray] = None) -> SubsetBank:
+    """Materialize the SA log into fixed-shape arrays, once.
+
+    Row masks come from one vectorized membership pass
+    (``batch_subset_masks``); per-subset histograms are a single
+    (S, n) @ (n, B) matmul per feature (exact integer counts in
+    float64).  ``inner_edges`` overrides the training-derived bin edges
+    — the hook ``extend_bank`` parity checks use, and the way an online
+    refit can pin the original fixed-bin contract across data epochs.
+    """
+    ii, oo, bb, thpt = (np.asarray(v, np.float64) for v in train)
+    subsets = list(log.subsets[-max_subsets:] if max_subsets
+                   else log.subsets)
+    masks = batch_subset_masks(ii, oo, bb, subsets, log.universes)
+    inner = (_bank_edges((ii, oo, bb, thpt), n_bins)
+             if inner_edges is None else np.asarray(inner_edges, np.float32))
+
+    cols = (ii, oo, bb, thpt)
+    onehot = _onehot_bins(cols, inner, n_bins)
+    masks_f = masks.astype(np.float64)
+    hist = np.einsum("sn,fnb->sfb", masks_f, onehot)
+    return _finalize_bank(inner, hist, masks, subsets, log.universes,
+                          n_bins)
+
+
+def extend_bank(bank: SubsetBank, train, n_delta: int,
+                new_subsets: Sequence[Subset],
+                universes: Dict[str, np.ndarray],
+                max_subsets: Optional[int] = DEFAULT_MAX_SUBSETS
+                ) -> SubsetBank:
+    """Incrementally grow a bank after rows were *appended* to the
+    training data and new subsets were logged (one online refit epoch).
+
+    ``train`` is the full concatenated (ii, oo, bb, thpt); its last
+    ``n_delta`` rows are the appended delta (the prefix must be the rows
+    the bank was built on — callers verify; ``ALA.refit`` does).  Counts
+    are additive under the fixed-bin contract, so instead of
+    re-histogramming every subset over every row this
+
+      1. extends the existing subsets' masks/histograms by only the
+         delta rows:  ``hist += masks(delta) @ onehot(delta)``  —
+         O(S_old x n_delta);
+      2. builds the new subsets' masks/histograms over the full rows —
+         O(S_new x n);
+      3. applies the trailing ``max_subsets`` window.
+
+    Bin edges are *kept* from the original bank (that is what makes the
+    update additive): delta rows outside the original training range
+    clip into the reserved boundary bins and read as distant — exactly
+    the drift signal the online engine watches.  The result is bit-equal
+    to ``build_subset_bank`` on the concatenated data + merged log with
+    ``inner_edges=bank.inner_edges``.
+    """
+    ii, oo, bb, thpt = (np.asarray(v, np.float64) for v in train)
+    n = len(ii)
+    n_old = n - int(n_delta)
+    if n_old != bank.masks.shape[1]:
+        raise ValueError(f"extend_bank: bank covers {bank.masks.shape[1]} "
+                         f"rows but train has {n} with n_delta={n_delta}")
+    cols = (ii, oo, bb, thpt)
+
+    # 1. old subsets gain only the delta rows' mass
+    if n_delta > 0:
+        d_masks = batch_subset_masks(ii[n_old:], oo[n_old:], bb[n_old:],
+                                     bank.subsets, universes)
+        d_onehot = _onehot_bins(tuple(c[n_old:] for c in cols),
+                                bank.inner_edges, bank.n_bins)
+        hist_old = bank.hist + np.einsum("sn,fnb->sfb",
+                                         d_masks.astype(np.float64),
+                                         d_onehot)
+        masks_old = np.concatenate([bank.masks, d_masks], axis=1)
+    else:
+        hist_old, masks_old = bank.hist.copy(), bank.masks
+
+    # 2. new subsets over the full rows
+    new_subsets = list(new_subsets)
+    if new_subsets:
+        n_masks = batch_subset_masks(ii, oo, bb, new_subsets, universes)
+        onehot = _onehot_bins(cols, bank.inner_edges, bank.n_bins)
+        hist_new = np.einsum("sn,fnb->sfb", n_masks.astype(np.float64),
+                             onehot)
+        hist = np.concatenate([hist_old, hist_new], axis=0)
+        masks = np.concatenate([masks_old, n_masks], axis=0)
+    else:
+        hist, masks = hist_old, masks_old
+    subsets = list(bank.subsets) + new_subsets
+
+    # 3. trailing window — same cap semantics as build_subset_bank
+    if max_subsets and len(subsets) > max_subsets:
+        subsets = subsets[-max_subsets:]
+        hist = hist[-max_subsets:]
+        masks = masks[-max_subsets:]
+    return _finalize_bank(bank.inner_edges, hist, masks, subsets,
+                          universes, bank.n_bins)
 
 
 def _make_bank_kernel():
@@ -322,9 +406,15 @@ def bank_distances(bank: SubsetBank, queries: Sequence,
         return np.zeros((0, S))
     if backend == "jax":
         vals, valid = _pack_queries(queries)
+        # pad the subset dim so banks growing across online epochs reuse
+        # the compiled kernel; per-(query, subset) dots are independent,
+        # so the padding columns are exact and sliced away
+        Sp = _pad_pow2(S, 8)
+        unit = (np.pad(bank.unit, [(0, Sp - S), (0, 0), (0, 0)])
+                if Sp != S else bank.unit)
         D = np.asarray(_bank_kernel(vals, valid, bank.inner_edges,
-                                    bank.unit), np.float64)
-        return D[:Q]
+                                    unit), np.float64)
+        return D[:Q, :S]
     D = np.empty((Q, S), np.float64)
     for qi, q in enumerate(queries):
         qh = np.stack([_count_hist(np.atleast_1d(q[fi]), bank.inner_edges[fi],

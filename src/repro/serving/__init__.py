@@ -2,5 +2,7 @@
 # autoscaling.  Layers:
 #   traces     — workload trace generators (arrival processes x shape mixes)
 #   simulator  — discrete-event continuous-batching replica fleet
-#   autoscaler — control policies (static baseline, ALA-guided)
+#   autoscaler — control policies (static baseline, ALA-guided; consumes
+#                core.online drift signals for mid-run recalibration)
 #   adapter    — steady-state windows -> core.dataset.Dataset rows
+#                (the delta feed for core.online.OnlineALA)

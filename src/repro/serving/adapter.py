@@ -43,39 +43,69 @@ class WindowSummary:
     n_completions: int
 
 
+def _window_overlaps(t0: float, t1: float, window_s: float, n_win: int):
+    """Yield (window index, overlap fraction) for the span [t0, t1].
+
+    Fractions sum to 1.0; a zero-duration span credits the window
+    containing ``t1`` entirely."""
+    if t1 <= t0:
+        yield min(max(int(t1 / window_s), 0), n_win - 1), 1.0
+        return
+    w0 = min(max(int(t0 / window_s), 0), n_win - 1)
+    w1 = min(max(int(np.ceil(t1 / window_s)) - 1, 0), n_win - 1)
+    dur = t1 - t0
+    for w in range(w0, w1 + 1):
+        ov = min(t1, (w + 1) * window_s) - max(t0, w * window_s)
+        # clipped boundary windows absorb any out-of-range span
+        if w == w0:
+            ov += max(w0 * window_s - t0, 0.0)
+        if w == w1:
+            ov += max(t1 - (w1 + 1) * window_s, 0.0)
+        yield w, ov / dur
+
+
 def summarize_windows(result: SimResult, window_s: float = 5.0,
                       min_completions: int = 2) -> List[WindowSummary]:
     if window_s <= 0:
         raise ValueError("window_s must be positive")
     horizon = result.sim_end_s
     n_win = max(int(np.ceil(horizon / window_s)), 1)
-    steps = [[] for _ in range(n_win)]
+    # a step spanning a window boundary splits by overlap fraction —
+    # crediting it entirely to the window holding t_end would bias both
+    # per-window busy time and thpt (tokens / busy second)
+    busy = np.zeros(n_win)
+    toks = np.zeros(n_win)
+    dec_t = np.zeros(n_win)
+    bb_wt = np.zeros(n_win)
     for s in result.steps:
-        w = min(int(s.t_end / window_s), n_win - 1)
-        steps[w].append(s)
+        for w, frac in _window_overlaps(s.t_end - s.duration_s, s.t_end,
+                                        window_s, n_win):
+            d = frac * s.duration_s
+            busy[w] += d
+            toks[w] += frac * s.tokens_out
+            if s.kind == "decode":
+                dec_t[w] += d
+                bb_wt[w] += s.bb * d
     comps = [[] for _ in range(n_win)]
     for r in result.completed:
         w = min(int(r.done_s / window_s), n_win - 1)
         comps[w].append(r)
     out: List[WindowSummary] = []
     for w in range(n_win):
-        cs, ss = comps[w], steps[w]
-        dec = [s for s in ss if s.kind == "decode"]
-        if len(cs) < min_completions or not dec:
+        cs = comps[w]
+        if len(cs) < min_completions or dec_t[w] <= 0:
             continue
-        busy = sum(s.duration_s for s in ss)
-        toks = sum(s.tokens_out for s in ss)
-        if busy <= 0 or toks <= 0:
+        if busy[w] <= 0 or toks[w] <= 0:
             continue
-        dec_t = sum(s.duration_s for s in dec)
-        bb = sum(s.bb * s.duration_s for s in dec) / max(dec_t, 1e-12)
+        bb = bb_wt[w] / max(dec_t[w], 1e-12)
         bii, boo = BatchingQueue.bucket(
             float(np.mean([r.ii for r in cs])),
             float(np.mean([r.oo for r in cs])))
         out.append(WindowSummary(
             t0=w * window_s, t1=min((w + 1) * window_s, horizon),
             ii=bii, oo=boo,
-            bb=float(bb), thpt=toks / busy, n_completions=len(cs)))
+            bb=float(bb), thpt=float(toks[w] / busy[w]),
+            n_completions=len(cs)))
     return out
 
 

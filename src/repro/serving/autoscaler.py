@@ -16,13 +16,24 @@ the dynamic setting.  At every control tick it:
     where demand is the window's output-token arrival rate, plus a queue
     drain term so backlogs clear within roughly one control interval.
 
+Streaming mode: attach a ``repro.core.online.OnlineALA`` (``online`` +
+``combo``) and the autoscaler (a) rebinds to the engine's freshest fit
+for its combination at every tick — a mid-run refit takes effect on the
+next control decision — and (b) accumulates tick-level drift evidence
+(median APE of measured vs predicted throughput at the current batch
+cap, and Alg 8 confidence) over a rolling window; when the evidence
+crosses the thresholds it calls ``online.request_refit`` so the next
+epoch ingest recalibrates even under the ``refit="drift"`` policy.
+Recalibration requests are logged in ``recalibrations``.
+
 ``StaticPolicy`` is the static-bb baseline the benchmark compares
 against: fixed replica count, fixed admission cap, no feedback.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
@@ -52,6 +63,59 @@ class ALAAutoscaler:
     max_replicas: int = 8
     # diagnostics: (confidence, derate, used_fallback) per control tick
     log: list = dataclasses.field(default_factory=list)
+    # streaming mode: online engine + this fleet's combination key
+    online: Optional[object] = None       # repro.core.online.OnlineALA
+    combo: Optional[Tuple[str, ...]] = None
+    drift_window: int = 6                 # ticks of evidence before acting
+    drift_ape_threshold: float = 50.0     # median window APE (%) trigger
+    drift_conf_floor: float = 0.05        # median window confidence trigger
+    # (t, median_ape, median_conf) per requested recalibration
+    recalibrations: list = dataclasses.field(default_factory=list)
+    _resid: collections.deque = dataclasses.field(
+        default_factory=lambda: collections.deque(maxlen=64), repr=False)
+    _generation: int = dataclasses.field(default=0, repr=False)
+
+    def _refresh_online(self) -> None:
+        """Rebind to the engine's freshest fit for our combination —
+        how a mid-run recalibration reaches the control loop.  The
+        engine refits ALA objects *in place*, so recalibrations are
+        detected through its generation counter, not object identity."""
+        if self.online is None or self.combo is None:
+            return
+        gen = self.online.generation_of(self.combo)
+        if gen != self._generation:
+            self._generation = gen
+            fresh = self.online.ala_for(self.combo)
+            if fresh is not None:
+                self.ala = fresh
+            self._resid.clear()       # evidence against the old fit
+
+    def _note_drift(self, obs: Observation, conf: float) -> None:
+        """Tick-level drift evidence: measured vs predicted throughput at
+        the batch size the fleet is *actually running* (the admission
+        cap would overstate throughput on a lightly loaded fleet and
+        read as permanent drift), plus the Alg 8 confidence."""
+        if obs.measured_tok_s <= 0.0 or obs.n_running <= 0:
+            return
+        bb_now = min(max(obs.n_running
+                         / max(obs.n_active_replicas, 1), 1.0),
+                     float(obs.batch_cap))
+        pred = float(self.ala.predict([obs.mean_ii], [obs.mean_oo],
+                                      [bb_now])[0])
+        ape = abs(obs.measured_tok_s - pred) / max(abs(pred), 1e-9) * 100.0
+        self._resid.append((ape, conf))
+        if self.online is None or self.combo is None:
+            return
+        if len(self._resid) < self.drift_window:
+            return
+        recent = list(self._resid)[-self.drift_window:]
+        med_ape = float(np.median([a for a, _ in recent]))
+        med_conf = float(np.median([c for _, c in recent]))
+        if med_ape > self.drift_ape_threshold \
+                or med_conf < self.drift_conf_floor:
+            self.online.request_refit(self.combo)
+            self.recalibrations.append((obs.now, med_ape, med_conf))
+            self._resid.clear()
 
     def _predict_per_replica(self, ii: float, oo: float
                              ) -> Tuple[int, float, float]:
@@ -68,11 +132,13 @@ class ALAAutoscaler:
         return int(bbs[i]), float(thpt[i]), float(conf)
 
     def control(self, obs: Observation) -> Action:
+        self._refresh_online()
         if obs.n_arrivals == 0:
             # idle window: hold the fleet, nothing to infer demand from
             return Action(n_replicas=obs.n_active_replicas,
                           batch_cap=obs.batch_cap)
         bb, pred, conf = self._predict_per_replica(obs.mean_ii, obs.mean_oo)
+        self._note_drift(obs, conf)
         derate = derate_confidence(conf, self.confidence_floor,
                                    self.min_derate)
         fallback = conf <= 0.0 and obs.measured_tok_s > 0.0

@@ -49,6 +49,10 @@ class SimConfig:
     provision_delay_s: float = 1.0
     drain_s: float = 120.0            # grace period past the horizon
     kv_capacity_override: Optional[float] = None  # tokens; None -> profile
+    # epochal streaming: start the clock (and the first control tick)
+    # at an offset so a Trace.slice with absolute arrival times replays
+    # as one epoch of a longer run instead of idling from t = 0
+    t_start: float = 0.0
 
 
 @dataclasses.dataclass
@@ -209,6 +213,7 @@ class SimResult:
     n_events: int
     replica_seconds: float
     controls: List[Tuple[float, Action]]
+    t_start: float = 0.0              # epochal replay offset (absolute)
 
     @property
     def completed(self) -> List[RequestRecord]:
@@ -223,7 +228,9 @@ class SimResult:
     @property
     def goodput_tok_s(self) -> float:
         toks = sum(r.oo for r in self.completed)
-        return toks / max(self.sim_end_s, 1e-9)
+        # elapsed span, not absolute clock: an epochal replay starting
+        # at t_start must not count the pre-epoch offset as serving time
+        return toks / max(self.sim_end_s - self.t_start, 1e-9)
 
     def ttft_percentile(self, q: float) -> float:
         vals = [r.ttft_s for r in self.records if np.isfinite(r.ttft_s)]
@@ -268,12 +275,13 @@ class FleetSimulator:
             push(req.arrival_s, _ARRIVAL, req)
         n_pending = len(self.trace.requests)
         if self.policy is not None and cfg.control_interval_s > 0:
-            push(cfg.control_interval_s, _CONTROL, None)
+            push(cfg.t_start + cfg.control_interval_s, _CONTROL, None)
 
         # per-window accumulators for Observation
         win = dict(arrivals=0, ii=0, oo=0, tokens=0, busy=0.0,
-                   last=0.0)
-        now, n_events, replica_seconds, last_t = 0.0, 0, 0.0, 0.0
+                   last=cfg.t_start)
+        n_events = 0
+        now, replica_seconds, last_t = cfg.t_start, 0.0, cfg.t_start
         deadline = self.trace.horizon_s + cfg.drain_s
 
         def maybe_start(r: Replica):
@@ -408,7 +416,7 @@ class FleetSimulator:
         ordered = [records[r.rid] for r in self.trace.requests]
         return SimResult(records=ordered, steps=steps, sim_end_s=now,
                          n_events=n_events, replica_seconds=replica_seconds,
-                         controls=controls)
+                         controls=controls, t_start=cfg.t_start)
 
 
 def simulate(trace: Trace, cfg: SimConfig, policy=None) -> SimResult:

@@ -168,6 +168,13 @@ class Trace:
                 "ii": np.array([r.ii for r in self.requests], np.int64),
                 "oo": np.array([r.oo for r in self.requests], np.int64)}
 
+    def slice(self, t0: float, t1: float) -> "Trace":
+        """Requests with ``t0 <= arrival < t1``, absolute times and rids
+        preserved — one epoch of this trace for the streaming loop
+        (pair with ``SimConfig.t_start=t0``)."""
+        reqs = tuple(r for r in self.requests if t0 <= r.arrival_s < t1)
+        return Trace(requests=reqs, horizon_s=float(t1), config=self.config)
+
     @classmethod
     def from_arrays(cls, arrival_s, ii, oo,
                     horizon_s: Optional[float] = None) -> "Trace":

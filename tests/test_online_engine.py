@@ -1,0 +1,470 @@
+"""Online incremental-refit engine + the stale-state bugfixes it rests on.
+
+Covers the four PR bugfixes (registry refit-after-append stale combos,
+``Dataset.concat`` schema validation, ``Dataset.from_rows`` row-index
+errors, window-boundary step attribution) and the ``OnlineALA`` engine:
+from-scratch parity of the incremental serving path, SA warm starts,
+additive bank extension, drift signals, and the autoscaler's mid-run
+recalibration hook.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import uncertainty
+from repro.core.ala import ALA, ALAConfig
+from repro.core.annealing import SAConfig, median_ape, merge_logs
+from repro.core.database import (build_exponential_database,
+                                 update_exponential_database)
+from repro.core.dataset import Dataset
+from repro.core.online import OnlineALA, OnlineConfig
+from repro.core.registry import ModelRegistry
+from repro.serving.adapter import _window_overlaps, summarize_windows
+from repro.serving.autoscaler import ALAAutoscaler
+from repro.serving.simulator import (Observation, RequestRecord, SimResult,
+                                     StepRecord)
+
+KEY_COLS = dict(acc="tpu-v5e", acc_count=4, back="sim-trace", prec="bf16",
+                mode="serve")
+
+
+def _rows(model, n, seed, scale=1.0, iis=(128, 256, 512, 1024)):
+    r = np.random.default_rng(seed)
+    ii = r.choice(iis, n)
+    oo = r.choice([64, 128, 256], n)
+    bb = r.choice([1, 2, 4, 8, 16, 32, 64], n)
+    thpt = (scale * 5000 * (1 - np.exp(-0.05 * bb)) * (512 / ii) ** 0.3
+            * r.lognormal(0, 0.03, n))
+    return [dict(model=model, **KEY_COLS, ii=int(a), oo=int(b), bb=int(c),
+                 thpt=float(t))
+            for a, b, c, t in zip(ii, oo, bb, thpt)]
+
+
+def _ds(model, n, seed, **kw):
+    return Dataset.from_rows(_rows(model, n, seed, **kw))
+
+
+def _wl(n, seed, iis=(128., 256, 512, 1024)):
+    r = np.random.default_rng(seed)
+    ii = r.choice(iis, n)
+    oo = r.choice([64., 128, 256], n)
+    bb = r.choice([1., 2, 4, 8, 16, 32, 64], n)
+    t = (5000 * (1 - np.exp(-0.05 * bb)) * (512 / ii) ** 0.3
+         * r.lognormal(0, 0.03, n))
+    return ii, oo, bb, t
+
+
+def _small_cfg(warm_iters=3, **kw):
+    sa = SAConfig(n_iters=4, n_chains=2, seed=0,
+                  gbt_kw=dict(n_estimators=15, learning_rate=0.2,
+                              max_depth=3))
+    return OnlineConfig(sa=sa, warm_iters=warm_iters,
+                        gbt_kw=dict(sa.gbt_kw), **kw)
+
+
+# ------------------------------------------------------- registry bugfixes
+def test_registry_full_fit_drops_stale_combos():
+    """Refitting on a dataset missing a combination must not keep the old
+    combination's model (or its stale ala) silently serving."""
+    both = _ds("m-a", 30, 1).concat(_ds("m-b", 30, 2))
+    reg = ModelRegistry().fit(both, n_estimators=10)
+    assert len(reg.combos) == 2
+    reg.combos[next(iter(reg.combos))] = dataclasses.replace(
+        next(iter(reg.combos.values())), ala=object())   # fake stale ala
+    only_a = _ds("m-a", 30, 3)
+    reg.fit(only_a, n_estimators=10)
+    assert len(reg.combos) == 1
+    assert next(iter(reg.combos))[0] == "m-a"
+    assert next(iter(reg.combos.values())).ala is None
+
+
+def test_registry_refit_updates_only_targets():
+    both = _ds("m-a", 30, 1).concat(_ds("m-b", 30, 2))
+    reg = ModelRegistry().fit(both, n_estimators=10)
+    combo_a = next(c for c in reg.combos if c[0] == "m-a")
+    combo_b = next(c for c in reg.combos if c[0] == "m-b")
+    reg.attach_ala(combo_b, object())
+    kept = reg.combos[combo_b]
+    grown = _ds("m-a", 45, 4)
+    reg.refit(grown, combos=[combo_a], n_estimators=10)
+    assert reg.combos[combo_b] is kept           # untouched, ala intact
+    assert reg.combos[combo_a].ala is None       # refit drops stale ala
+    pred = reg.predict(both)
+    assert np.isfinite(pred).all() and (pred > 0).all()
+
+
+def test_registry_refit_rejects_unknown_combo_and_key_mismatch():
+    reg = ModelRegistry().fit(_ds("m-a", 30, 1), n_estimators=10)
+    with pytest.raises(ValueError, match="no rows"):
+        reg.refit(_ds("m-a", 10, 2), combos=[("m-zzz",) * 6])
+    missing_keys = Dataset({k: _ds("m-a", 10, 3)[k]
+                            for k in ("ii", "oo", "bb", "thpt", "model")})
+    with pytest.raises(ValueError, match="key columns"):
+        reg.refit(missing_keys)
+
+
+def test_registry_update_combo_matches_full_fit():
+    """Append-only incremental combo update == from-scratch fit, bit-near."""
+    d0, d1 = _ds("m-a", 40, 1), _ds("m-a", 12, 2, iis=(64, 256))
+    full = d0.concat(d1)
+    reg = ModelRegistry().fit(d0, n_estimators=10)
+    combo = next(iter(reg.combos))
+    reg.update_combo(combo, full.workload, n_delta=len(d1), n_estimators=10)
+    scratch = ModelRegistry().fit(full, n_estimators=10)
+    np.testing.assert_allclose(reg.predict(full), scratch.predict(full),
+                               atol=1e-6)
+
+
+# -------------------------------------------------------- dataset bugfixes
+def test_concat_schema_mismatch_names_columns():
+    a = Dataset({"ii": np.arange(3), "oo": np.arange(3)})
+    b = Dataset({"ii": np.arange(2)})
+    with pytest.raises(ValueError, match=r"\['oo'\] missing from other"):
+        a.concat(b)
+    with pytest.raises(ValueError, match=r"\['oo'\] only in other"):
+        b.concat(a)
+    c = Dataset({"ii": np.arange(2), "oo": np.arange(2),
+                 "thpt": np.ones(2)})
+    with pytest.raises(ValueError, match="thpt"):
+        a.concat(c)
+
+
+def test_concat_dtype_promotion_deterministic():
+    num = Dataset({"acc_count": np.array([4, 8]), "x": np.array([1, 2])})
+    txt = Dataset({"acc_count": np.array(["4", "16"]),
+                   "x": np.array([3.5, 4.5])})
+    out = num.concat(txt)
+    assert out["acc_count"].dtype.kind == "U"
+    assert list(out["acc_count"]) == ["4", "8", "4", "16"]
+    assert out["x"].dtype.kind == "f"            # numeric promotes normally
+    np.testing.assert_allclose(out["x"], [1.0, 2.0, 3.5, 4.5])
+    # symmetric: str side first gives the same column dtypes
+    assert txt.concat(num)["acc_count"].dtype.kind == "U"
+
+
+def test_from_rows_reports_offending_row_and_key():
+    rows = [dict(ii=1, oo=2), dict(ii=3, oo=4), dict(ii=5)]
+    with pytest.raises(ValueError, match=r"row 2.*missing keys \['oo'\]"):
+        Dataset.from_rows(rows)
+    rows = [dict(ii=1), dict(ii=2, extra=9)]
+    with pytest.raises(ValueError, match=r"row 1 .*unexpected keys"
+                                         r" \['extra'\]"):
+        Dataset.from_rows(rows)
+    with pytest.raises(ValueError):
+        Dataset.from_rows([])
+
+
+# ------------------------------------------------ adapter window attribution
+def test_window_overlap_fractions_sum_to_one():
+    for (t0, t1) in ((0.0, 1.0), (4.0, 7.0), (2.5, 12.5), (9.9, 10.0),
+                     (3.0, 3.0)):
+        fr = list(_window_overlaps(t0, t1, 5.0, 3))
+        assert sum(f for _, f in fr) == pytest.approx(1.0)
+        assert all(0 <= w < 3 for w, _ in fr)
+
+
+def test_boundary_straddling_step_split_by_overlap():
+    """A 2 s step ending 1 s after a window boundary must credit half its
+    time/tokens to each side, not all of it to the t_end window."""
+    recs = [RequestRecord(rid=0, ii=8, oo=4, arrival_s=0.1,
+                          first_token_s=1.0, done_s=3.0),
+            RequestRecord(rid=1, ii=8, oo=4, arrival_s=0.2,
+                          first_token_s=6.0, done_s=8.0)]
+    steps = [StepRecord(t_end=6.0, replica=0, kind="decode", bb=4,
+                        duration_s=2.0, tokens_out=8),
+             StepRecord(t_end=3.0, replica=0, kind="decode", bb=2,
+                        duration_s=1.0, tokens_out=2),
+             StepRecord(t_end=8.0, replica=0, kind="decode", bb=2,
+                        duration_s=1.0, tokens_out=2)]
+    res = SimResult(records=recs, steps=steps, sim_end_s=10.0, n_events=5,
+                    replica_seconds=10.0, controls=[])
+    wins = summarize_windows(res, window_s=5.0, min_completions=1)
+    assert len(wins) == 2
+    # per window: 1 s own step + 1 s (half) of the straddler -> 2 s busy,
+    # 2 + 4 tokens -> thpt 3.0 both sides; old t_end crediting gave
+    # 1.0 vs 4.67
+    assert wins[0].thpt == pytest.approx(3.0)
+    assert wins[1].thpt == pytest.approx(3.0)
+    # duration-weighted bb: (2*1 + 4*1) / 2 = 3.0 in both windows
+    assert wins[0].bb == pytest.approx(3.0)
+    assert wins[1].bb == pytest.approx(3.0)
+
+
+def test_window_totals_conserved():
+    """Overlap splitting conserves each step's duration and tokens, for
+    random spans including ones longer than a whole window."""
+    rng = np.random.default_rng(0)
+    n_win, window_s = 7, 3.0
+    busy = np.zeros(n_win)
+    toks = np.zeros(n_win)
+    total_busy = total_toks = 0.0
+    t = 0.0
+    for _ in range(60):
+        d = float(rng.uniform(0.05, 4.5))      # some spans > window_s
+        t = min(t + d, n_win * window_s)
+        fr = list(_window_overlaps(t - d, t, window_s, n_win))
+        assert sum(f for _, f in fr) == pytest.approx(1.0)
+        for w, f in fr:
+            busy[w] += f * d
+            toks[w] += f * 2
+        total_busy += d
+        total_toks += 2
+    assert busy.sum() == pytest.approx(total_busy)
+    assert toks.sum() == pytest.approx(total_toks)
+
+
+# ----------------------------------------------------- incremental database
+def test_update_exponential_database_parity():
+    old = _wl(60, 1)
+    delta = _wl(15, 2, iis=(64., 256, 2048))     # new and existing groups
+    full = tuple(np.concatenate([a, b]) for a, b in zip(old, delta))
+    db0 = build_exponential_database(*old)
+    inc = update_exponential_database(db0, *full, n_delta=15)
+    ref = build_exponential_database(*full)
+    assert set(inc.params) == set(ref.params)
+    for k in ref.params:
+        np.testing.assert_array_equal(inc.params[k], ref.params[k])
+    np.testing.assert_array_equal(inc.training, ref.training)
+
+
+def test_update_exponential_database_single_group_delta():
+    old = _wl(60, 1)
+    d_ii = np.full(3, 256.0)
+    delta = (d_ii, np.full(3, 64.0), np.array([2.0, 8.0, 32.0]),
+             np.array([900.0, 2400.0, 4100.0]))
+    full = tuple(np.concatenate([a, b]) for a, b in zip(old, delta))
+    inc = update_exponential_database(build_exponential_database(*old),
+                                      *full, n_delta=3)
+    ref = build_exponential_database(*full)
+    for k in ref.params:
+        np.testing.assert_array_equal(inc.params[k], ref.params[k])
+
+
+# ------------------------------------------------------- ALA refit + bank
+@pytest.fixture(scope="module")
+def warm_ala():
+    tr, te = _wl(70, 1), _wl(25, 2)
+    ala = ALA(ALAConfig(sa=SAConfig(n_iters=4, n_chains=2, seed=0,
+                                    gbt_kw=dict(n_estimators=15,
+                                                learning_rate=0.2,
+                                                max_depth=3)),
+                        gbt_kw=dict(n_estimators=15, learning_rate=0.15,
+                                    max_depth=3)))
+    ala.fit(*tr)
+    ala.explore(te)
+    ala.fit_error()
+    ala.bank()
+    return ala, tr, te
+
+
+def test_ala_refit_warm_starts_from_previous_best(warm_ala):
+    ala, tr, te = warm_ala
+    prev_best = dict(ala.sa_log.best_subset)
+    n0 = len(ala.sa_log.subsets)
+    delta = _wl(20, 3)
+    full = tuple(np.concatenate([a, b]) for a, b in zip(tr, delta))
+    log = ala.refit(full, te, n_iters=3, n_chains=2)
+    assert len(log.subsets) > n0
+    # chain 0 of the new run starts from the previous best subset
+    assert log.subsets[n0] == prev_best
+    e, c = ala.estimate(te)
+    assert np.isfinite(e) and 0.0 <= c <= 1.0
+
+
+def test_ala_refit_extends_bank_incrementally(warm_ala):
+    ala, _, te = warm_ala
+    tr_now = ala._train
+    bank0 = ala.bank()
+    delta = _wl(10, 7)
+    full = tuple(np.concatenate([a, b]) for a, b in zip(tr_now, delta))
+    ala.refit(full, te, n_iters=2, n_chains=2)
+    bank1 = ala.bank()
+    # incremental extension == from-scratch rebuild under pinned edges
+    ref = uncertainty.build_subset_bank(full, ala.sa_log,
+                                        inner_edges=bank0.inner_edges)
+    np.testing.assert_array_equal(bank1.hist, ref.hist)
+    np.testing.assert_array_equal(bank1.masks, ref.masks)
+    np.testing.assert_array_equal(bank1.valid, ref.valid)
+    np.testing.assert_array_equal(bank1.inner_edges, bank0.inner_edges)
+
+
+def test_extend_bank_trailing_window():
+    tr, te = _wl(50, 1), _wl(20, 2)
+    ala = ALA(ALAConfig(sa=SAConfig(n_iters=6, n_chains=1, seed=0,
+                                    gbt_kw=dict(n_estimators=10,
+                                                learning_rate=0.3,
+                                                max_depth=2))))
+    ala.fit(*tr)
+    log = ala.explore(te)
+    bank = uncertainty.build_subset_bank(tr, log, max_subsets=5)
+    assert bank.n_subsets == 5
+    delta = _wl(8, 3)
+    full = tuple(np.concatenate([a, b]) for a, b in zip(tr, delta))
+    merged = merge_logs(log, log)
+    out = uncertainty.extend_bank(bank, full, 8, log.subsets,
+                                  merged.universes, max_subsets=5)
+    assert out.n_subsets == 5                     # window still applies
+    ref = uncertainty.build_subset_bank(full, merged, max_subsets=5,
+                                        inner_edges=bank.inner_edges)
+    np.testing.assert_array_equal(out.hist, ref.hist)
+
+
+def test_merge_logs_union_universes_and_fresh_best():
+    tr, te = _wl(40, 1), _wl(15, 2)
+    cfg = SAConfig(n_iters=3, n_chains=1, seed=0,
+                   gbt_kw=dict(n_estimators=10, learning_rate=0.3,
+                               max_depth=2))
+    ala = ALA(ALAConfig(sa=cfg))
+    ala.fit(*tr)
+    log_a = ala.explore(te)
+    tr2 = tuple(np.concatenate([a, b]) for a, b in zip(tr, _wl(10, 9,
+                iis=(64., 4096))))
+    ala2 = ALA(ALAConfig(sa=cfg))
+    ala2.fit(*tr2)
+    log_b = ala2.explore(te)
+    merged = merge_logs(log_a, log_b)
+    assert len(merged.subsets) == len(log_a.subsets) + len(log_b.subsets)
+    assert merged.best_subset == log_b.best_subset
+    for dim in ("ii", "oo", "bb"):
+        assert set(log_a.universes[dim]) <= set(merged.universes[dim])
+        assert set(log_b.universes[dim]) <= set(merged.universes[dim])
+
+
+# ------------------------------------------------------------- OnlineALA
+def test_online_parity_and_selective_refit():
+    eng = OnlineALA(_small_cfg())
+    eng.ingest(_ds("m-a", 40, 1).concat(_ds("m-b", 40, 2)),
+               n_estimators=10)
+    combo_a = next(c for c in eng.combos if c[0] == "m-a")
+    combo_b = next(c for c in eng.combos if c[0] == "m-b")
+    ala_b = eng.ala_for(combo_b)
+    rep = eng.ingest(_ds("m-a", 20, 3), n_estimators=10)
+    assert rep.changed == [combo_a] and rep.refit == [combo_a]
+    assert eng.ala_for(combo_b) is ala_b          # untouched combo kept
+    # serving-path parity with a from-scratch registry on the same rows
+    full = eng.full_data()
+    scratch = ModelRegistry().fit(full, n_estimators=10)
+    np.testing.assert_allclose(eng.predict(full), scratch.predict(full),
+                               atol=1e-6)
+    # uncertainty path serves finite estimates for both combos
+    err, d, conf = eng.estimate(full, backend="numpy")
+    assert np.isfinite(err).all() and (conf > 0).all()
+
+
+def test_online_drift_detection_and_policy():
+    eng = OnlineALA(_small_cfg(refit="drift", drift_err_ratio=2.0))
+    eng.ingest(_ds("m-a", 50, 1), n_estimators=10)
+    combo = eng.combos[0]
+    # same-distribution delta: no drift, no refit under the drift policy
+    rep = eng.ingest(_ds("m-a", 15, 2), n_estimators=10)
+    assert not rep.drift[combo].drifted
+    assert rep.refit == [] and rep.skipped == [combo]
+    # regime shift: residual growth must trigger a refit
+    rep2 = eng.ingest(_ds("m-a", 15, 3, scale=0.25), n_estimators=10)
+    assert rep2.drift[combo].drifted
+    assert rep2.drift[combo].reason in ("residual_growth",
+                                        "confidence_collapse")
+    assert rep2.refit == [combo]
+
+
+def test_online_drift_policy_refits_skipped_epoch_rows():
+    """Epochs skipped under refit="drift" still accumulate rows; the
+    next refit must treat them all as delta, not as fitted prefix —
+    otherwise groups touched only by skipped epochs stay stale."""
+    eng = OnlineALA(_small_cfg(refit="drift", drift_err_ratio=2.0))
+    eng.ingest(_ds("m-a", 50, 1), n_estimators=10)
+    combo = eng.combos[0]
+    skipped = eng.ingest(_ds("m-a", 12, 2, iis=(64, 128)), n_estimators=10)
+    assert skipped.refit == []                    # no drift -> no refit
+    forced = eng.ingest(_ds("m-a", 12, 3, scale=0.25), n_estimators=10)
+    assert forced.refit == [combo]
+    full = eng.full_data()
+    scratch = ModelRegistry().fit(full, n_estimators=10)
+    np.testing.assert_allclose(eng.predict(full), scratch.predict(full),
+                               atol=1e-6)
+
+
+def test_online_request_refit_forces_recalibration():
+    eng = OnlineALA(_small_cfg(refit="drift"))
+    eng.ingest(_ds("m-a", 50, 1), n_estimators=10)
+    combo = eng.combos[0]
+    eng.request_refit(combo)
+    rep = eng.ingest(_ds("m-a", 12, 2), n_estimators=10)
+    assert rep.refit == [combo]                   # forced despite no drift
+    # a forced combo refits even when the next ingest carries no rows
+    # for it (the promise the autoscaler's recalibration log relies on)
+    gen = eng.generation_of(combo)
+    eng.request_refit(combo)
+    rep2 = eng.ingest(_ds("m-b", 30, 3), n_estimators=10)
+    assert combo in rep2.refit and combo not in rep2.changed
+    assert eng.generation_of(combo) == gen + 1
+
+
+def test_online_min_rows_skips_uncertainty_not_predict():
+    eng = OnlineALA(_small_cfg(min_rows=64))
+    rep = eng.ingest(_ds("m-a", 20, 1), n_estimators=10)
+    combo = eng.combos[0]
+    assert rep.refit == [] and eng.ala_for(combo) is None
+    probe = _ds("m-a", 10, 2)
+    assert np.isfinite(eng.predict(probe)).all()  # Alg 4/5 still serves
+    err, d, conf = eng.estimate(probe, backend="numpy")
+    assert np.isnan(err).all() and (conf == 0.0).all()   # sentinel
+
+
+def test_online_key_mismatch_raises():
+    eng = OnlineALA(_small_cfg())
+    eng.ingest(_ds("m-a", 20, 1), n_estimators=10)
+    bad = Dataset({k: _ds("m-a", 5, 2)[k]
+                   for k in ("model", "ii", "oo", "bb", "thpt")})
+    with pytest.raises(ValueError, match="key columns"):
+        eng.ingest(bad)
+
+
+# ----------------------------------------------- autoscaler recalibration
+def _obs(now, measured, batch_cap=64):
+    return Observation(now=now, window_s=2.0, n_arrivals=10, mean_ii=256.0,
+                       mean_oo=128.0, arrival_rate=5.0, queue_len=0,
+                       n_running=4, n_active_replicas=1,
+                       batch_cap=batch_cap, decode_tokens=2000, busy_s=2.0,
+                       measured_tok_s=measured)
+
+
+def test_autoscaler_requests_recalibration_on_residual_growth():
+    eng = OnlineALA(_small_cfg(refit="drift"))
+    eng.ingest(_ds("m-a", 50, 1), n_estimators=10)
+    combo = eng.combos[0]
+    pol = ALAAutoscaler(ala=eng.ala_for(combo), online=eng, combo=combo,
+                        drift_window=3, drift_ape_threshold=40.0)
+    pred = float(pol.ala.predict([256.0], [128.0], [64.0])[0])
+    for i in range(4):
+        pol.control(_obs(2.0 * (i + 1), measured=pred * 3.0))
+    assert pol.recalibrations, "sustained residual must trigger a request"
+    rep = eng.ingest(_ds("m-a", 12, 2), n_estimators=10)
+    assert rep.refit == [combo]                   # consumed by the engine
+    # after the refit the autoscaler rebinds to the fresh ALA on its
+    # next tick (mid-run recalibration reaches the control loop)
+    fresh = eng.ala_for(combo)
+    pol.control(_obs(20.0, measured=pred))
+    assert pol.ala is fresh
+
+
+def test_goodput_uses_elapsed_span_not_absolute_clock():
+    """An epochal replay starting at t_start must not count the
+    pre-epoch offset as serving time."""
+    rec = RequestRecord(rid=0, ii=8, oo=100, arrival_s=61.0,
+                        first_token_s=62.0, done_s=70.0)
+    base = dict(records=[rec], steps=[], n_events=1, replica_seconds=20.0,
+                controls=[])
+    offset = SimResult(sim_end_s=80.0, t_start=60.0, **base)
+    zero = SimResult(sim_end_s=20.0, **base)
+    assert offset.goodput_tok_s == pytest.approx(zero.goodput_tok_s)
+    assert offset.goodput_tok_s == pytest.approx(100 / 20.0)
+
+
+def test_autoscaler_without_online_keeps_legacy_behavior():
+    eng = OnlineALA(_small_cfg())
+    eng.ingest(_ds("m-a", 50, 1), n_estimators=10)
+    pol = ALAAutoscaler(ala=eng.ala_for(eng.combos[0]))
+    act = pol.control(_obs(2.0, measured=1000.0))
+    assert act.n_replicas >= 1 and not pol.recalibrations
