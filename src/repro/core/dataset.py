@@ -101,7 +101,9 @@ class Dataset:
                 f.write(",".join(str(self.cols[k][i]) for k in keys) + "\n")
 
     @classmethod
-    def from_rows(cls, rows: Iterable[Dict]) -> "Dataset":
+    def from_rows(cls, rows: Iterable[Dict],
+                  require_finite: Tuple[str, ...] = ("ii", "oo", "bb",
+                                                     "thpt")) -> "Dataset":
         rows = list(rows)
         if not rows:
             raise ValueError("from_rows needs at least one row (the "
@@ -120,4 +122,20 @@ class Dataset:
                     parts.append(f"unexpected keys {extra}")
                 raise ValueError(f"from_rows: row {i} does not match the "
                                  f"row-0 schema: " + ", ".join(parts))
-        return cls({k: np.asarray([r[k] for r in rows]) for k in keys})
+        cols = {k: np.asarray([r[k] for r in rows]) for k in keys}
+        # a single NaN/inf workload value silently poisons every fit the
+        # dataset feeds — refuse them at the door (opt out with
+        # require_finite=None when building deliberately-corrupted data)
+        for k in (require_finite or ()):
+            v = cols.get(k)
+            if v is None or v.dtype.kind not in "fiu":
+                continue
+            bad = ~np.isfinite(v.astype(np.float64))
+            if bad.any():
+                first = int(np.nonzero(bad)[0][0])
+                raise ValueError(
+                    f"from_rows: column {k!r} has {int(bad.sum())} "
+                    f"non-finite value(s) (first at row {first}); drop or "
+                    f"repair these rows, or pass require_finite=None to "
+                    f"build a deliberately-corrupted dataset")
+        return cls(cols)

@@ -34,6 +34,15 @@ region it claims to know).  The resulting ``DriftSignal`` is returned in
 the ``RefitReport`` and consumed by
 ``repro.serving.autoscaler.ALAAutoscaler``, which can also force a
 recalibration mid-run via ``request_refit``.
+
+Robust ingestion: every delta passes a gate *before* drift detection or
+any fit.  Non-finite / non-positive throughput rows are always
+quarantined; with ``OnlineConfig.gate`` on, exact duplicates (telemetry
+replays) and MAD robust-z outliers against the current registry fit are
+quarantined too — corrupted telemetry can neither poison a refit nor
+fake a ``DriftSignal``.  Refusals are logged in
+``OnlineALA.quarantine`` (``QuarantineRecord``) and counted in
+``RefitReport.n_quarantined``.
 """
 from __future__ import annotations
 
@@ -65,6 +74,17 @@ class OnlineConfig:
     # refit policy: "changed" refits every combination whose data grew;
     # "drift" refits only drifted / forced / never-fitted ones
     refit: str = "changed"
+    # robust-ingestion gate.  Non-finite / non-positive throughput rows
+    # are ALWAYS quarantined (a single NaN silently poisons every
+    # downstream fit); ``gate=True`` additionally rejects exact
+    # duplicates (telemetry replays) and MAD robust-z outliers against
+    # the combination's current registry fit — a row is an outlier only
+    # if its log-residual z-score exceeds ``gate_z_max`` AND its
+    # prediction ratio exceeds ``gate_min_ratio``, so a uniform drift
+    # shift (small z) still passes and retrains the model
+    gate: bool = False
+    gate_z_max: float = 4.0
+    gate_min_ratio: float = 5.0
     # drift thresholds (see DriftSignal)
     drift_conf_floor: float = 0.35
     drift_err_ratio: float = 3.0
@@ -94,6 +114,15 @@ class DriftSignal:
 
 
 @dataclasses.dataclass
+class QuarantineRecord:
+    """One row the ingestion gate refused, and why."""
+    epoch: int
+    combo: Tuple[str, ...]
+    reason: str                       # "nonfinite" | "duplicate" | "outlier"
+    row: Dict
+
+
+@dataclasses.dataclass
 class RefitReport:
     epoch: int
     n_rows: int                                   # delta rows ingested
@@ -104,6 +133,7 @@ class RefitReport:
     registry_s: float = 0.0
     uncertainty_s: float = 0.0
     wall_s: float = 0.0
+    n_quarantined: int = 0                        # rows the gate refused
 
 
 @dataclasses.dataclass
@@ -138,9 +168,11 @@ class OnlineALA:
         self.registry = registry or ModelRegistry(keys=self.cfg.keys)
         self.epoch = 0
         self.history: List[RefitReport] = []
+        self.quarantine: List[QuarantineRecord] = []
         self._state: Dict[Tuple[str, ...], _ComboState] = {}
         self._keys: Optional[Tuple[str, ...]] = None
         self._forced: set = set()
+        self._seen: Dict[Tuple[str, ...], set] = {}
 
     # -- delta plumbing ------------------------------------------------------
     def combo_of(self, row: Dict) -> Tuple[str, ...]:
@@ -183,6 +215,67 @@ class OnlineALA:
                 sub = sub.mask(sub[k].astype(str) == v)
             out.append((tuple(str(v) for v in combo), sub))
         return out
+
+    # -- robust-ingestion gate ----------------------------------------------
+    def _gate(self, combo: Tuple[str, ...], sub: Dataset
+              ) -> Tuple[Dataset, int]:
+        """Filter a combination's delta before it can touch drift
+        detection or any fit.  Always rejects non-finite / non-positive
+        throughput and non-finite features; with ``cfg.gate`` also
+        rejects exact duplicates and robust-z outliers (see
+        ``OnlineConfig``).  Every rejected row lands in
+        ``self.quarantine`` with its reason."""
+        cfg = self.cfg
+        ii, oo, bb, thpt = sub.workload
+        n = len(sub)
+        reason = [""] * n
+        keep = (np.isfinite(ii) & np.isfinite(oo) & np.isfinite(bb)
+                & np.isfinite(thpt) & (thpt > 0))
+        for i in np.nonzero(~keep)[0]:
+            reason[i] = "nonfinite"
+        if cfg.gate:
+            seen = self._seen.setdefault(combo, set())
+            for i in range(n):
+                if not keep[i]:
+                    continue
+                key = (float(ii[i]), float(oo[i]), float(bb[i]),
+                       float(thpt[i]))
+                if key in seen:
+                    keep[i] = False
+                    reason[i] = "duplicate"
+                else:
+                    seen.add(key)
+            if keep.any() and combo in self.registry.combos:
+                live = np.nonzero(keep)[0]
+                with np.errstate(all="ignore"):
+                    pred = np.asarray(
+                        self.registry.predict(sub.mask(keep)), np.float64)
+                    ok = np.isfinite(pred) & (pred > 0)
+                    r = np.where(ok, np.log(thpt[live])
+                                 - np.log(np.where(ok, pred, 1.0)), np.nan)
+                    if ok.any():
+                        med = float(np.median(r[ok]))
+                        mad = float(np.median(np.abs(r[ok] - med)))
+                        scale = max(1.4826 * mad, 1e-3)
+                        z = np.abs(r - med) / scale
+                        ratio = np.maximum(
+                            thpt[live] / np.where(ok, pred, 1.0),
+                            np.where(ok, pred, 1.0) / thpt[live])
+                        bad = ok & (z > cfg.gate_z_max) \
+                            & (ratio > cfg.gate_min_ratio)
+                        for j in np.nonzero(bad)[0]:
+                            i = int(live[j])
+                            keep[i] = False
+                            reason[i] = "outlier"
+        dropped = np.nonzero(~keep)[0]
+        for i in dropped:
+            row = {k: (v[i].item() if isinstance(v[i], np.generic)
+                       else v[i]) for k, v in sub.cols.items()}
+            self.quarantine.append(QuarantineRecord(
+                epoch=self.epoch, combo=combo, reason=reason[i], row=row))
+        if len(dropped) == 0:
+            return sub, 0
+        return sub.mask(keep), int(len(dropped))
 
     # -- drift ---------------------------------------------------------------
     def _drift(self, combo: Tuple[str, ...], sub: Dataset) -> DriftSignal:
@@ -257,7 +350,14 @@ class OnlineALA:
         parts = self._split_delta(delta)
         drift: Dict[Tuple[str, ...], DriftSignal] = {}
         changed: List[Tuple[str, ...]] = []
+        n_quarantined = 0
         for combo, sub in parts:
+            # gate FIRST: quarantined rows must not fake a DriftSignal
+            # or reach any fit
+            sub, n_q = self._gate(combo, sub)
+            n_quarantined += n_q
+            if len(sub) == 0:
+                continue
             drift[combo] = self._drift(combo, sub)     # vs. the OLD fit
             self._append(combo, sub)
             changed.append(combo)
@@ -312,7 +412,8 @@ class OnlineALA:
             refit=refit, skipped=[c for c in changed if c not in refit],
             drift=drift, registry_s=registry_s,
             uncertainty_s=uncertainty_s,
-            wall_s=time.perf_counter() - t_all)
+            wall_s=time.perf_counter() - t_all,
+            n_quarantined=n_quarantined)
         self.history.append(report)
         return report
 

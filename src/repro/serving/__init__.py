@@ -6,3 +6,6 @@
 #                core.online drift signals for mid-run recalibration)
 #   adapter    — steady-state windows -> core.dataset.Dataset rows
 #                (the delta feed for core.online.OnlineALA)
+#   faults     — seed-deterministic fault plans (crash/restart cycles,
+#                straggler windows, telemetry corruption) injected into
+#                the simulator and the adapter stream

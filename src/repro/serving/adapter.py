@@ -20,6 +20,7 @@ group separately from — static-grid rows in one ``Dataset``.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, List
 
 import numpy as np
@@ -120,17 +121,34 @@ def windows_to_rows(windows: List[WindowSummary], setup: ServingSetup,
             for w in windows]
 
 
+def _finite_row(row: Dict) -> bool:
+    return all(np.isfinite(float(row[k])) for k in ("ii", "oo", "bb",
+                                                    "thpt"))
+
+
 def windows_to_dataset(result: SimResult, setup: ServingSetup, model: str,
                        window_s: float = 5.0, min_completions: int = 2,
-                       back: str = TRACE_BACKEND) -> Dataset:
+                       back: str = TRACE_BACKEND,
+                       on_nonfinite: str = "drop") -> Dataset:
     """Steady-state windows of one simulated run as a registry dataset.
 
     Raises ``ValueError`` when no window reaches steady state — callers
     should lengthen the trace or shrink ``window_s`` rather than feed an
-    empty dataset into a fit."""
+    empty dataset into a fit.  Non-finite window rows (a degenerate or
+    fault-corrupted measurement) are dropped with a warning reporting
+    the count (``on_nonfinite="drop"``) or raise
+    (``on_nonfinite="raise"``); they never reach the fit silently."""
     rows = windows_to_rows(
         summarize_windows(result, window_s, min_completions),
         setup, model, back=back)
+    n_bad = sum(1 for r in rows if not _finite_row(r))
+    if n_bad:
+        if on_nonfinite == "raise":
+            raise ValueError(f"windows_to_dataset: {n_bad} non-finite "
+                             f"window row(s)")
+        warnings.warn(f"windows_to_dataset: dropped {n_bad} non-finite "
+                      f"window row(s)", RuntimeWarning, stacklevel=2)
+        rows = [r for r in rows if _finite_row(r)]
     if not rows:
         raise ValueError("no steady-state windows in this run; "
                          "lengthen the trace or shrink window_s")

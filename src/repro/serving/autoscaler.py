@@ -26,6 +26,20 @@ crosses the thresholds it calls ``online.request_refit`` so the next
 epoch ingest recalibrates even under the ``refit="drift"`` policy.
 Recalibration requests are logged in ``recalibrations``.
 
+Graceful degradation under faults: predictions are sanity-checked (a
+non-finite or non-positive supply falls back to the measured rate, or
+holds the fleet when there is nothing measured); sustained
+degenerate/low-confidence ticks trigger an exponential backoff during
+which the controller stops trusting the model entirely and sizes from
+measured throughput only; and scale-*down* requires
+``scale_down_patience`` consecutive ticks of evidence, so a
+crash-restart flap (capacity dips, the controller scales up, the
+replica restores, capacity jumps) does not thrash the replica count.
+The controller always plans against *healthy* capacity: crashed
+replicas are excluded from ``Observation.n_active_replicas`` by the
+simulator, so the absolute target it returns is a healthy-replica
+target and the fleet provisions replacements for the dead.
+
 ``StaticPolicy`` is the static-bb baseline the benchmark compares
 against: fixed replica count, fixed admission cap, no feedback.
 """
@@ -71,9 +85,22 @@ class ALAAutoscaler:
     drift_conf_floor: float = 0.05        # median window confidence trigger
     # (t, median_ape, median_conf) per requested recalibration
     recalibrations: list = dataclasses.field(default_factory=list)
+    # graceful degradation: backoff after sustained unreliable ticks,
+    # hysteresis against crash-restart flapping
+    backoff_after: int = 3            # consecutive unreliable ticks to arm
+    backoff_base: int = 2             # ticks held on first backoff
+    backoff_cap: int = 16             # doubling stops here
+    backoff_conf_floor: float = 0.05  # conf below this counts as unreliable
+    scale_down_patience: int = 2      # consecutive shrink-wanting ticks
+    # (t, kind) per degradation action: "backoff" | "hold_down"
+    degradations: list = dataclasses.field(default_factory=list)
     _resid: collections.deque = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=64), repr=False)
     _generation: int = dataclasses.field(default=0, repr=False)
+    _unreliable_streak: int = dataclasses.field(default=0, repr=False)
+    _backoff_left: int = dataclasses.field(default=0, repr=False)
+    _backoff_len: int = dataclasses.field(default=0, repr=False)
+    _down_streak: int = dataclasses.field(default=0, repr=False)
 
     def _refresh_online(self) -> None:
         """Rebind to the engine's freshest fit for our combination —
@@ -102,7 +129,10 @@ class ALAAutoscaler:
                      float(obs.batch_cap))
         pred = float(self.ala.predict([obs.mean_ii], [obs.mean_oo],
                                       [bb_now])[0])
-        ape = abs(obs.measured_tok_s - pred) / max(abs(pred), 1e-9) * 100.0
+        # a poisoned fit predicting NaN/inf is maximal drift evidence,
+        # not a reason to go quiet — count it as an unbounded residual
+        ape = (abs(obs.measured_tok_s - pred) / max(abs(pred), 1e-9)
+               * 100.0 if np.isfinite(pred) else float("inf"))
         self._resid.append((ape, conf))
         if self.online is None or self.combo is None:
             return
@@ -121,13 +151,20 @@ class ALAAutoscaler:
                              ) -> Tuple[int, float, float]:
         """(best bb, predicted tok/s at it, confidence of the region)."""
         bbs = np.asarray(self.candidate_bb, np.float64)
-        thpt = self.ala.predict(np.full(len(bbs), ii),
-                                np.full(len(bbs), oo), bbs)
+        thpt = np.asarray(self.ala.predict(np.full(len(bbs), ii),
+                                           np.full(len(bbs), oo), bbs),
+                          np.float64)
         conf = 1.0
         if self.ala.error_model is not None and self.ala.sa_log is not None:
             q = (np.full(len(bbs), ii), np.full(len(bbs), oo), bbs,
                  np.full(len(bbs), np.nan))
             _, conf = self.ala.estimate(q)
+        # a corrupted fit can emit NaN/inf/negative throughput; never let
+        # argmax pick it — if nothing valid remains, report the
+        # degenerate sentinel so the caller falls back to measured rates
+        thpt = np.where(np.isfinite(thpt), thpt, -np.inf)
+        if not (thpt > 0.0).any():
+            return int(bbs[-1]), float("nan"), 0.0
         i = int(np.argmax(thpt))
         return int(bbs[i]), float(thpt[i]), float(conf)
 
@@ -139,14 +176,45 @@ class ALAAutoscaler:
                           batch_cap=obs.batch_cap)
         bb, pred, conf = self._predict_per_replica(obs.mean_ii, obs.mean_oo)
         self._note_drift(obs, conf)
+        # --- backoff bookkeeping: sustained unreliable ticks arm an
+        # exponential hold during which the model is not consulted ------
+        unreliable = (not np.isfinite(pred)) or pred <= 0.0 \
+            or (not np.isfinite(conf)) or conf <= self.backoff_conf_floor
+        if unreliable:
+            self._unreliable_streak += 1
+        else:
+            self._unreliable_streak = 0
+            self._backoff_len = 0
+        in_backoff = False
+        if self._backoff_left > 0:
+            self._backoff_left -= 1
+            in_backoff = True
+        elif self._unreliable_streak >= self.backoff_after:
+            self._backoff_len = int(min(
+                max(2 * self._backoff_len, self.backoff_base),
+                self.backoff_cap))
+            self._backoff_left = self._backoff_len - 1
+            self._unreliable_streak = 0
+            in_backoff = True
+            self.degradations.append((obs.now, "backoff"))
         derate = derate_confidence(conf, self.confidence_floor,
                                    self.min_derate)
-        fallback = conf <= 0.0 and obs.measured_tok_s > 0.0
+        fallback = obs.measured_tok_s > 0.0 and (
+            conf <= 0.0 or in_backoff
+            or not np.isfinite(pred) or pred <= 0.0)
         if fallback:
-            # degenerate sentinel: trust what the fleet actually served
+            # degenerate sentinel / backoff: trust what the fleet served
             supply = obs.measured_tok_s
+            if in_backoff:
+                bb = obs.batch_cap    # don't re-plan the cap off the model
         else:
             supply = pred * derate
+        if not np.isfinite(supply) or supply <= 0.0:
+            # poisoned prediction and nothing measured: hold the fleet
+            self.log.append((float(conf), float(derate), True))
+            return Action(n_replicas=max(obs.n_active_replicas,
+                                         self.min_replicas),
+                          batch_cap=obs.batch_cap)
         self.log.append((float(conf), float(derate), bool(fallback)))
         # demand: fresh output tokens/s plus draining the standing queue
         demand = obs.arrival_rate * obs.mean_oo
@@ -154,4 +222,14 @@ class ALAAutoscaler:
         need = (demand + backlog) / max(self.util_target * supply, 1e-9)
         n = int(np.clip(int(np.ceil(need)), self.min_replicas,
                         self.max_replicas))
+        # --- scale-down hysteresis: a crash-restart flap reads as a
+        # capacity dip then a jump; require sustained evidence to shrink
+        cur = max(obs.n_active_replicas, self.min_replicas)
+        if n < cur:
+            self._down_streak += 1
+            if self._down_streak < self.scale_down_patience:
+                self.degradations.append((obs.now, "hold_down"))
+                n = cur
+        else:
+            self._down_streak = 0
         return Action(n_replicas=n, batch_cap=bb)

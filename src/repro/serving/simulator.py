@@ -18,9 +18,21 @@ come up after ``provision_delay_s``; scale-down drains (stops routing,
 finishes in-flight work).  Every event pops through one seeded,
 counter-tiebroken heap, so a run is exactly reproducible.
 
-Metrics: per-request TTFT / TPOT / E2E, fleet goodput, TTFT-SLO
-attainment (unfinished requests count as misses), replica-seconds
-(cost), and the raw step log consumed by ``repro.serving.adapter``.
+Fault injection (``SimConfig.faults`` = a ``serving.faults``
+``FaultInjector``): replica crash/restart windows enter the same event
+heap.  A crash loses the replica's KV state — in-flight sequences are
+requeued to surviving replicas under a bounded retry budget
+(``max_retries``) with deadline-based shedding (``shed_after_s``);
+restarts pay ``restart_warmup_s`` through the provisioning path before
+serving again.  Straggler windows multiply that replica's step times.
+Every admitted request ends as exactly one of completed / shed
+(``SimResult.check_conservation`` enforces it), and shed requests count
+as SLO misses in *both* ``slo_attainment`` and ``ttft_percentile``.
+
+Metrics: per-request TTFT / TPOT / E2E (+ retry/shed accounting), fleet
+goodput, TTFT-SLO attainment (shed and unfinished requests count as
+misses), replica-seconds (cost), availability under faults, and the raw
+step log consumed by ``repro.serving.adapter``.
 """
 from __future__ import annotations
 
@@ -33,9 +45,10 @@ import numpy as np
 
 from repro.perfmodel.simulator import (ServingSetup, decode_step_time_group,
                                        kv_capacity_tokens, prefill_step_time)
+from repro.serving.faults import FaultEvent
 from repro.serving.traces import Trace, TraceRequest
 
-_ARRIVAL, _STEP_DONE, _CONTROL, _PROVISION = 0, 1, 2, 3
+_ARRIVAL, _STEP_DONE, _CONTROL, _PROVISION, _CRASH, _RESTORE = range(6)
 
 
 @dataclasses.dataclass
@@ -53,6 +66,10 @@ class SimConfig:
     # at an offset so a Trace.slice with absolute arrival times replays
     # as one epoch of a longer run instead of idling from t = 0
     t_start: float = 0.0
+    # fault injection (see repro.serving.faults)
+    faults: Optional[object] = None   # FaultInjector; None -> fault-free
+    max_retries: int = 2              # crash requeues per request
+    shed_after_s: Optional[float] = None  # age limit at requeue; None -> off
 
 
 @dataclasses.dataclass
@@ -64,6 +81,10 @@ class RequestRecord:
     replica: int = -1
     first_token_s: Optional[float] = None
     done_s: Optional[float] = None
+    retries: int = 0                  # crash-driven requeues
+    shed: bool = False                # dropped: never completed
+    shed_s: Optional[float] = None
+    shed_reason: str = ""             # oversized|retry_budget|deadline|unserved
 
     @property
     def completed(self) -> bool:
@@ -124,6 +145,9 @@ class Replica:
         self.draining = False
         self.active = True            # provisioned and routable
         self.provisioning = False     # _PROVISION event in flight
+        self.failed = False           # crashed: down until its restore
+        self.restore_to_active = True  # what the restore should bring back
+        self.incarnation = 0          # bumps on crash; stale steps ignored
 
     @property
     def load(self) -> int:
@@ -131,6 +155,26 @@ class Replica:
 
     def _kv_need(self, s: _Seq) -> float:
         return float(s.rec.ii + s.rec.oo)
+
+    def fail(self) -> Tuple[List["_Seq"], List["_Seq"]]:
+        """Crash: lose all KV state.  Returns (in-flight, queued) — the
+        in-flight sequences lost computed KV (a retry), the queued ones
+        merely need rerouting.  Any step completion already in the heap
+        belongs to the old incarnation and is ignored when it pops."""
+        self.restore_to_active = (self.active or self.provisioning) \
+            and not self.draining
+        inflight = list(self.prefilling) + list(self.running)
+        queued = list(self.waiting)
+        self.prefilling, self.running = [], []
+        self.waiting.clear()
+        self.kv_reserved = 0.0
+        self.busy = False
+        self.active = False
+        self.provisioning = False
+        self.draining = False
+        self.failed = True
+        self.incarnation += 1
+        return inflight, queued
 
     def begin_step(self) -> Optional[Tuple[float, str]]:
         """Pick the next iteration; returns (duration, kind) or None."""
@@ -197,6 +241,7 @@ class Observation:
     decode_tokens: int                # emitted in window, fleet-wide
     busy_s: float                     # summed step time in window
     measured_tok_s: float             # decode_tokens / busy_s (0 if idle)
+    n_failed_replicas: int = 0        # crashed replicas currently down
 
 
 @dataclasses.dataclass
@@ -214,15 +259,47 @@ class SimResult:
     replica_seconds: float
     controls: List[Tuple[float, Action]]
     t_start: float = 0.0              # epochal replay offset (absolute)
+    availability: float = 1.0         # healthy / (healthy + crashed) rs
+    fault_log: List[FaultEvent] = dataclasses.field(default_factory=list)
 
     @property
     def completed(self) -> List[RequestRecord]:
         return [r for r in self.records if r.completed]
 
+    @property
+    def shed(self) -> List[RequestRecord]:
+        return [r for r in self.records if r.shed]
+
+    @property
+    def n_retries(self) -> int:
+        return sum(r.retries for r in self.records)
+
+    def accounting(self) -> Dict[str, int]:
+        return {"admitted": len(self.records),
+                "completed": len(self.completed),
+                "shed": len(self.shed)}
+
+    def check_conservation(self) -> None:
+        """Every admitted request must end as exactly one of completed /
+        shed — none lost, none double-counted.  Raises on violation;
+        the fault_engine smoke run turns this into a CI gate."""
+        acc = self.accounting()
+        both = sum(1 for r in self.records if r.completed and r.shed)
+        if both or acc["completed"] + acc["shed"] != acc["admitted"]:
+            raise RuntimeError(
+                f"request conservation violated: {acc}, "
+                f"completed&shed overlap={both}")
+
     def slo_attainment(self, ttft_slo_s: float) -> float:
+        """Fraction of admitted requests whose first token arrived in
+        time.  Shed and never-completed requests are explicit misses —
+        the same convention ``ttft_percentile`` uses, so the two metrics
+        always agree about failed requests."""
         if not self.records:
             return 1.0
-        ok = sum(1 for r in self.records if r.ttft_s <= ttft_slo_s)
+        ok = sum(1 for r in self.records
+                 if not r.shed and r.first_token_s is not None
+                 and r.ttft_s <= ttft_slo_s)
         return ok / len(self.records)
 
     @property
@@ -232,9 +309,34 @@ class SimResult:
         # at t_start must not count the pre-epoch offset as serving time
         return toks / max(self.sim_end_s - self.t_start, 1e-9)
 
-    def ttft_percentile(self, q: float) -> float:
-        vals = [r.ttft_s for r in self.records if np.isfinite(r.ttft_s)]
-        return float(np.percentile(vals, q)) if vals else float("inf")
+    def ttft_percentile(self, q: float, on_missing: str = "inf") -> float:
+        """TTFT percentile over admitted requests.
+
+        Shed / never-first-token requests contribute ``inf`` by default
+        — consistent with ``slo_attainment`` counting them as misses.
+        ``on_missing="drop"`` restores the completed-only view (useful
+        for plotting finite tails), but the default never lets a run
+        that shed half its traffic report a rosy p95."""
+        if on_missing not in ("inf", "drop"):
+            raise ValueError(f"on_missing {on_missing!r}: 'inf' or 'drop'")
+        vals = [float("inf") if (r.shed or r.first_token_s is None)
+                else r.ttft_s for r in self.records]
+        if on_missing == "drop":
+            vals = [v for v in vals if np.isfinite(v)]
+        if not vals:
+            return float("inf")
+        # manual linear interpolation: np.percentile returns NaN when the
+        # quantile straddles the inf mass (inf - inf inside its lerp);
+        # the answer there is inf, and finite data matches numpy exactly
+        svals = np.sort(np.asarray(vals, np.float64))
+        pos = (len(svals) - 1) * q / 100.0
+        lo = int(np.floor(pos))
+        frac = pos - lo
+        if frac == 0.0:
+            return float(svals[lo])
+        if not np.isfinite(svals[lo + 1]):
+            return float("inf")
+        return float(svals[lo] * (1.0 - frac) + svals[lo + 1] * frac)
 
 
 class FleetSimulator:
@@ -259,6 +361,7 @@ class FleetSimulator:
         records: Dict[int, RequestRecord] = {}
         steps: List[StepRecord] = []
         controls: List[Tuple[float, Action]] = []
+        fault_log: List[FaultEvent] = []
         heap: List[Tuple[float, int, int, object]] = []
         tick = 0
 
@@ -277,11 +380,26 @@ class FleetSimulator:
         if self.policy is not None and cfg.control_interval_s > 0:
             push(cfg.t_start + cfg.control_interval_s, _CONTROL, None)
 
+        inj = cfg.faults
+        warmup_s = float(inj.cfg.restart_warmup_s) if inj is not None \
+            else 0.0
+        if inj is not None:
+            # crash windows enter the same heap as everything else; a
+            # window straddling t_start starts the replica down.  Ids
+            # beyond the live fleet are ignored at pop time (the plan
+            # covers max_replicas, the fleet may be smaller).
+            for w in inj.crash_windows():
+                if w.replica >= cfg.max_replicas or w.t_up <= cfg.t_start:
+                    continue
+                push(max(w.t_down, cfg.t_start), _CRASH, w.replica)
+                push(w.t_up, _RESTORE, w.replica)
+
         # per-window accumulators for Observation
         win = dict(arrivals=0, ii=0, oo=0, tokens=0, busy=0.0,
                    last=cfg.t_start)
         n_events = 0
         now, replica_seconds, last_t = cfg.t_start, 0.0, cfg.t_start
+        failed_seconds = 0.0
         deadline = self.trace.horizon_s + cfg.drain_s
 
         def maybe_start(r: Replica):
@@ -290,26 +408,58 @@ class FleetSimulator:
             got = r.begin_step()
             if got is not None:
                 dur, kind = got
+                if inj is not None:
+                    dur *= inj.slow_factor(r.rid, now)
                 r.busy = True
-                push(now + dur, _STEP_DONE, (r, kind, dur))
+                push(now + dur, _STEP_DONE, (r, kind, dur, r.incarnation))
 
-        def route(req: TraceRequest):
+        def shed(rec: RequestRecord, t: float, reason: str):
             nonlocal n_pending
-            rec = RequestRecord(rid=req.rid, ii=req.ii, oo=req.oo,
-                                arrival_s=req.arrival_s)
-            records[req.rid] = rec
-            if req.ii + req.oo > self.kv_cap:
-                # can never fit any replica's KV: reject at admission
-                # (inf TTFT => SLO miss) instead of head-of-line blocking
-                n_pending -= 1
-                return
-            cands = [r for r in replicas if r.active and not r.draining]
+            rec.shed = True
+            rec.shed_s = t
+            rec.shed_reason = reason
+            n_pending -= 1
+
+        def dispatch(rec: RequestRecord):
+            # crashed replicas take no new work; fall back progressively
+            cands = [r for r in replicas
+                     if r.active and not r.draining and not r.failed]
             if not cands:
-                cands = [r for r in replicas if r.active] or replicas
+                cands = ([r for r in replicas if r.active and not r.failed]
+                         or [r for r in replicas if not r.failed]
+                         or replicas)
             tgt = min(cands, key=lambda r: (r.load, r.rid))
             rec.replica = tgt.rid
             tgt.waiting.append(_Seq(rec))
             maybe_start(tgt)
+
+        def route(req: TraceRequest):
+            rec = RequestRecord(rid=req.rid, ii=req.ii, oo=req.oo,
+                                arrival_s=req.arrival_s)
+            records[req.rid] = rec
+            if req.ii + req.oo > self.kv_cap:
+                # can never fit any replica's KV: shed at admission
+                # (SLO miss) instead of head-of-line blocking
+                shed(rec, now, "oversized")
+                return
+            dispatch(rec)
+
+        def requeue_or_shed(s: _Seq, t: float):
+            """A crash displaced this sequence: retry on a healthy
+            replica within budget + deadline, else shed."""
+            rec = s.rec
+            if rec.retries > cfg.max_retries:
+                shed(rec, t, "retry_budget")
+                return
+            if cfg.shed_after_s is not None \
+                    and t - rec.arrival_s > cfg.shed_after_s:
+                shed(rec, t, "deadline")
+                return
+            # KV (and any generated tokens) died with the replica: the
+            # retry restarts generation, so TTFT restarts too (no
+            # streaming resume across replicas)
+            rec.first_token_s = None
+            dispatch(rec)
 
         def apply_action(act: Action):
             act = Action(n_replicas=int(np.clip(act.n_replicas, 1,
@@ -326,7 +476,8 @@ class FleetSimulator:
                         r.draining = False
                         need -= 1
                 for r in replicas:
-                    if need and not r.active and not r.provisioning:
+                    if need and not r.active and not r.provisioning \
+                            and not r.failed:
                         r.draining = False
                         r.provisioning = True
                         push(now + cfg.provision_delay_s, _PROVISION, r)
@@ -355,7 +506,9 @@ class FleetSimulator:
             if t > deadline:
                 break
             n_active = sum(1 for r in replicas if r.active)
+            n_failed = sum(1 for r in replicas if r.failed)
             replica_seconds += n_active * (t - last_t)
+            failed_seconds += n_failed * (t - last_t)
             last_t = now = t
             n_events += 1
             if kind == _ARRIVAL:
@@ -366,7 +519,9 @@ class FleetSimulator:
                 route(req)
             elif kind == _STEP_DONE:
                 steps_in_flight -= 1
-                r, skind, dur = payload
+                r, skind, dur, inc = payload
+                if inc != r.incarnation:
+                    continue          # step of a crashed incarnation
                 r.busy = False
                 n_pre = len(r.prefilling)
                 finished = r.finish_step(skind, t)
@@ -382,7 +537,45 @@ class FleetSimulator:
                 maybe_start(r)
                 if r.draining and not r.busy and r.load == 0:
                     r.active = False              # drained dry: decommission
+            elif kind == _CRASH:
+                if payload >= len(replicas):
+                    continue          # plan covers more replicas than live
+                r = replicas[payload]
+                if r.failed:
+                    continue          # overlapping windows: already down
+                inflight, queued = r.fail()
+                fault_log.append(FaultEvent(t=t, kind="crash",
+                                            replica=r.rid,
+                                            n_displaced=len(inflight)
+                                            + len(queued)))
+                for s in inflight:
+                    s.rec.retries += 1            # computed KV was lost
+                    requeue_or_shed(s, t)
+                for s in queued:
+                    requeue_or_shed(s, t)         # rerouted, not a retry
+            elif kind == _RESTORE:
+                if payload >= len(replicas):
+                    continue
+                r = replicas[payload]
+                if not r.failed:
+                    continue
+                r.failed = False
+                fault_log.append(FaultEvent(t=t, kind="restore",
+                                            replica=r.rid))
+                if r.restore_to_active:
+                    # restart pays a warm-up through the provisioning path
+                    if warmup_s > 0:
+                        r.provisioning = True
+                        push(t + warmup_s, _PROVISION, r)
+                    else:
+                        r.active = True
+                        maybe_start(r)
             elif kind == _PROVISION:
+                if payload.failed:
+                    # crashed while provisioning/warming: stay down — the
+                    # restore (or the autoscaler) re-arms it later
+                    payload.provisioning = False
+                    continue
                 payload.provisioning = False
                 if not payload.draining:   # drained meanwhile: stay down
                     payload.active = True
@@ -403,7 +596,8 @@ class FleetSimulator:
                     batch_cap=replicas[0].batch_cap,
                     decode_tokens=win["tokens"], busy_s=win["busy"],
                     measured_tok_s=(win["tokens"] / win["busy"]
-                                    if win["busy"] > 0 else 0.0))
+                                    if win["busy"] > 0 else 0.0),
+                    n_failed_replicas=sum(1 for r in replicas if r.failed))
                 act = apply_action(self.policy.control(obs))
                 controls.append((t, act))
                 win = dict(arrivals=0, ii=0, oo=0, tokens=0, busy=0.0,
@@ -414,9 +608,19 @@ class FleetSimulator:
                 break
 
         ordered = [records[r.rid] for r in self.trace.requests]
+        # whatever is still in flight when the horizon + drain expires
+        # was never served: shed it explicitly so admitted == completed
+        # + shed holds unconditionally (request conservation)
+        for rec in ordered:
+            if not rec.completed and not rec.shed:
+                shed(rec, now, "unserved")
+        denom = replica_seconds + failed_seconds
         return SimResult(records=ordered, steps=steps, sim_end_s=now,
                          n_events=n_events, replica_seconds=replica_seconds,
-                         controls=controls, t_start=cfg.t_start)
+                         controls=controls, t_start=cfg.t_start,
+                         availability=(replica_seconds / denom
+                                       if denom > 0 else 1.0),
+                         fault_log=fault_log)
 
 
 def simulate(trace: Trace, cfg: SimConfig, policy=None) -> SimResult:

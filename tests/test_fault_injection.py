@@ -1,0 +1,296 @@
+"""Fault-injection layer: deterministic fault plans, crash/retry/shed
+request conservation, straggler slowdowns, graceful autoscaler
+degradation (backoff + scale-down hysteresis), and the shed-aware
+metric consistency between ``slo_attainment`` and ``ttft_percentile``.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.dataset import Dataset
+from repro.perfmodel.simulator import ServingSetup
+from repro.perfmodel.tpu import TPU_V5E
+from repro.serving import adapter
+from repro.serving.adapter import WindowSummary, windows_to_dataset
+from repro.serving.autoscaler import ALAAutoscaler
+from repro.serving.faults import (CrashWindow, FaultConfig, FaultInjector,
+                                  FaultPlan, StragglerWindow, injector)
+from repro.serving.simulator import (Observation, RequestRecord, SimConfig,
+                                     SimResult, simulate)
+from repro.serving.traces import TraceConfig, make_trace
+
+
+@pytest.fixture(scope="module")
+def setup():
+    return ServingSetup(cfg=get_config("llama3.1-8b"), hw=TPU_V5E, chips=4)
+
+
+@pytest.fixture(scope="module")
+def trace():
+    return make_trace(TraceConfig(arrival="poisson", rate=6.0,
+                                  horizon_s=15.0, seed=3))
+
+
+CRASHY = FaultConfig(seed=11, horizon_s=15.0, n_replicas=3, mttf_s=5.0,
+                     mttr_s=2.0, restart_warmup_s=0.5)
+
+
+@pytest.fixture(scope="module")
+def crash_results(setup, trace):
+    cfg = lambda: SimConfig(setup=setup, n_replicas=3, faults=injector(  # noqa: E731
+        CRASHY), max_retries=2, shed_after_s=20.0)
+    return simulate(trace, cfg()), simulate(trace, cfg())
+
+
+# ------------------------------------------------------------- fault plans
+def test_fault_plan_deterministic_and_seed_sensitive():
+    cfg = FaultConfig(seed=3, horizon_s=60.0, n_replicas=4, mttf_s=20.0,
+                      mttr_s=4.0, straggler_rate_hz=0.02)
+    a, b = FaultPlan.build(cfg), FaultPlan.build(cfg)
+    assert a == b and a.fingerprint() == b.fingerprint()
+    assert a.crashes and a.stragglers
+    other = FaultPlan.build(FaultConfig(seed=4, horizon_s=60.0,
+                                        n_replicas=4, mttf_s=20.0,
+                                        mttr_s=4.0,
+                                        straggler_rate_hz=0.02))
+    assert other.fingerprint() != a.fingerprint()
+    # windows are well-formed: positive spans inside (or started in) the
+    # horizon, replica ids within the plan's fleet
+    for w in a.crashes:
+        assert 0 <= w.replica < 4 and 0.0 <= w.t_down < 60.0
+        assert w.t_up > w.t_down
+    quiet = FaultPlan.build(FaultConfig(seed=3, horizon_s=60.0))
+    assert not quiet.crashes and not quiet.stragglers
+
+
+def test_corrupt_rows_deterministic_and_accounted():
+    cfg = FaultConfig(seed=5, drop_p=0.1, dup_p=0.1, poison_nan_p=0.1,
+                      poison_scale_p=0.1)
+    rows = [dict(ii=128, oo=64, bb=8, thpt=1000.0 + i) for i in range(200)]
+    out1, rep1 = injector(cfg).corrupt_rows(rows)
+    out2, rep2 = injector(cfg).corrupt_rows(rows)
+    assert repr(out1) == repr(out2)         # same plan -> same corruption
+    assert repr(rep1) == repr(rep2)         # (repr: NaN poison != itself)
+    # every input row is exactly one of dropped/duplicated/poisoned/clean
+    assert rep1.n_in == len(rows)
+    assert len(out1) == rep1.n_in - rep1.n_dropped + rep1.n_duplicated
+    assert len(rep1.clean_rows) == rep1.n_in - rep1.n_dropped \
+        - rep1.n_poisoned
+    assert rep1.n_dropped and rep1.n_duplicated and rep1.n_poisoned
+    # poisoned rows really are poisoned: non-finite or wildly scaled
+    bad = [r for r in out1 if r not in rep1.clean_rows]
+    assert any(not np.isfinite(r["thpt"]) for r in bad)
+
+
+# ------------------------------------------------- crash/retry conservation
+def test_crash_sim_conservation_and_availability(crash_results):
+    res, _ = crash_results
+    res.check_conservation()
+    acc = res.accounting()
+    assert acc["admitted"] == acc["completed"] + acc["shed"]
+    assert res.n_retries > 0                # crashes displaced work
+    assert 0.0 < res.availability < 1.0
+    kinds = {e.kind for e in res.fault_log}
+    assert kinds == {"crash", "restore"}
+    crashes = [e for e in res.fault_log if e.kind == "crash"]
+    assert any(e.n_displaced > 0 for e in crashes)
+
+
+def test_fault_timeline_bit_identical(crash_results):
+    a, b = crash_results
+    assert [r.done_s for r in a.records] == [r.done_s for r in b.records]
+    assert [r.retries for r in a.records] == [r.retries for r in b.records]
+    assert [(e.t, e.kind, e.replica, e.n_displaced) for e in a.fault_log] \
+        == [(e.t, e.kind, e.replica, e.n_displaced) for e in b.fault_log]
+
+
+def test_no_faults_is_the_old_simulator(setup, trace):
+    res = simulate(trace, SimConfig(setup=setup, n_replicas=2))
+    res.check_conservation()
+    assert res.availability == 1.0 and not res.fault_log
+    assert not res.shed and res.n_retries == 0
+
+
+def test_straggler_window_slows_completion(setup, trace):
+    base_cfg = FaultConfig(seed=0, horizon_s=trace.horizon_s, n_replicas=1)
+    slow = FaultInjector(FaultPlan(
+        cfg=base_cfg, crashes=(),
+        stragglers=(StragglerWindow(replica=0, t0=0.0, t1=1e9, slow=3.0),)))
+    r_slow = simulate(trace, SimConfig(setup=setup, n_replicas=1,
+                                       faults=slow))
+    r_base = simulate(trace, SimConfig(setup=setup, n_replicas=1))
+    assert slow.slow_factor(0, 5.0) == 3.0
+    assert slow.slow_factor(1, 5.0) == 1.0          # other replicas fine
+    # every step ran 3x longer, so the run drains later and p95 grows
+    assert r_slow.sim_end_s > r_base.sim_end_s
+    assert r_slow.ttft_percentile(95) > r_base.ttft_percentile(95)
+
+
+def test_retry_budget_and_deadline_shedding(setup):
+    tr = make_trace(TraceConfig(arrival="poisson", rate=8.0,
+                                horizon_s=6.0, seed=5))
+    # replica 0 dies every 2 s and stays down 1.5 s: with a zero retry
+    # budget every displaced in-flight sequence sheds immediately
+    plan = FaultPlan(
+        cfg=FaultConfig(seed=0, horizon_s=6.0, n_replicas=1, mttr_s=1.5),
+        crashes=tuple(CrashWindow(replica=0, t_down=t, t_up=t + 1.5)
+                      for t in (2.0, 4.0, 6.0)),
+        stragglers=())
+    res = simulate(tr, SimConfig(setup=setup, n_replicas=1,
+                                 faults=FaultInjector(plan),
+                                 max_retries=0, shed_after_s=8.0))
+    res.check_conservation()
+    assert res.shed
+    reasons = {r.shed_reason for r in res.shed}
+    assert reasons <= {"retry_budget", "deadline", "unserved"}
+    assert "retry_budget" in reasons
+    # shed requests are SLO misses in BOTH metrics (the satellite bugfix)
+    assert res.slo_attainment(1e9) == pytest.approx(
+        len(res.completed) / len(res.records))
+    assert np.isinf(res.ttft_percentile(100.0))
+    assert np.isfinite(res.ttft_percentile(95.0, on_missing="drop"))
+
+
+def test_oversized_request_shed_with_reason(setup):
+    tr = make_trace(TraceConfig(arrival="poisson", rate=4.0,
+                                horizon_s=5.0, seed=9))
+    arrs = tr.to_arrays()
+    arrs["ii"][1] = 10_000
+    from repro.serving.traces import Trace
+    big = Trace.from_arrays(**arrs, horizon_s=tr.horizon_s)
+    cap = max(r.ii + r.oo for r in big.requests if r.ii < 10_000) + 500.0
+    res = simulate(big, SimConfig(setup=setup, n_replicas=1,
+                                  drain_s=5000.0,
+                                  kv_capacity_override=cap))
+    res.check_conservation()
+    oversized = [r for r in res.shed if r.shed_reason == "oversized"]
+    assert len(oversized) == 1 and oversized[0].ii == 10_000
+
+
+# ----------------------------------------------- metric consistency (unit)
+def test_slo_and_percentile_agree_on_shed():
+    done = RequestRecord(rid=0, ii=8, oo=4, arrival_s=0.0,
+                         first_token_s=1.0, done_s=2.0)
+    lost = RequestRecord(rid=1, ii=8, oo=4, arrival_s=0.0, shed=True,
+                         shed_s=3.0, shed_reason="retry_budget")
+    res = SimResult(records=[done, lost], steps=[], sim_end_s=5.0,
+                    n_events=2, replica_seconds=5.0, controls=[])
+    res.check_conservation()
+    assert res.slo_attainment(10.0) == pytest.approx(0.5)
+    assert np.isinf(res.ttft_percentile(99.0))
+    assert res.ttft_percentile(99.0, on_missing="drop") \
+        == pytest.approx(1.0)
+    # double-counting must be caught
+    lost.done_s = 4.0
+    with pytest.raises(RuntimeError, match="conservation"):
+        res.check_conservation()
+
+
+# ------------------------------------------------- autoscaler degradation
+def _obs(now, measured=1000.0, n_active=1, n_running=4):
+    return Observation(now=now, window_s=2.0, n_arrivals=10, mean_ii=256.0,
+                       mean_oo=128.0, arrival_rate=5.0, queue_len=0,
+                       n_running=n_running, n_active_replicas=n_active,
+                       batch_cap=64, decode_tokens=2000, busy_s=2.0,
+                       measured_tok_s=measured)
+
+
+def _pol(pred):
+    pol = ALAAutoscaler(ala=None)
+    pol._predict_per_replica = lambda ii, oo: pred
+    pol._note_drift = lambda obs, conf: None
+    return pol
+
+
+def test_backoff_arms_after_sustained_unreliable_ticks():
+    pol = _pol((64, float("nan"), 0.0))
+    for i in range(2):
+        act = pol.control(_obs(2.0 * (i + 1)))
+        assert act.n_replicas >= 1
+    assert not pol.degradations             # 2 ticks: not armed yet
+    pol.control(_obs(6.0))
+    assert [k for _, k in pol.degradations] == ["backoff"]
+    assert pol._backoff_left == pol.backoff_base - 1
+    # during backoff the controller sizes from measured throughput and
+    # keeps the fleet's batch cap instead of re-planning off the model
+    act = pol.control(_obs(8.0))
+    assert act.batch_cap == 64
+    assert pol.log[-1][2] is True           # fallback path
+    # repeated arming doubles the hold up to the cap
+    for i in range(12):
+        pol.control(_obs(10.0 + 2 * i))
+    assert sum(1 for _, k in pol.degradations if k == "backoff") >= 2
+    assert pol._backoff_len <= pol.backoff_cap
+
+
+def test_backoff_releases_on_reliable_ticks():
+    pol = _pol((64, float("nan"), 0.0))
+    for i in range(3):
+        pol.control(_obs(2.0 * (i + 1)))
+    assert pol.degradations
+    pol._predict_per_replica = lambda ii, oo: (64, 5000.0, 0.9)
+    for i in range(4):
+        pol.control(_obs(10.0 + 2 * i))
+    assert pol._unreliable_streak == 0 and pol._backoff_left == 0
+    assert pol._backoff_len == 0            # healed: next arm starts small
+
+
+def test_unreliable_prediction_holds_fleet_when_nothing_measured():
+    pol = _pol((64, float("nan"), 0.0))
+    act = pol.control(_obs(2.0, measured=0.0, n_active=3))
+    assert act.n_replicas == 3              # no model, no data: hold
+
+
+def test_scale_down_hysteresis_delays_shrink():
+    pol = _pol((64, 1e6, 1.0))              # huge supply -> wants 1 replica
+    o = lambda t: _obs(t, measured=0.0, n_active=4, n_running=0)  # noqa: E731
+    act1 = pol.control(o(2.0))
+    assert act1.n_replicas == 4             # held: first shrink-wanting tick
+    assert ("hold_down" in [k for _, k in pol.degradations])
+    act2 = pol.control(o(4.0))
+    assert act2.n_replicas == 1             # patience met: shrink allowed
+    # an up-or-hold tick resets the streak
+    pol2 = _pol((64, 1e6, 1.0))
+    pol2.control(o(2.0))
+    pol2._predict_per_replica = lambda ii, oo: (64, 10.0, 1.0)
+    pol2.control(o(4.0))                    # wants MORE replicas: reset
+    assert pol2._down_streak == 0
+
+
+# ------------------------------------------------ non-finite row validation
+def test_from_rows_rejects_nonfinite_and_opt_out():
+    rows = [dict(ii=128, oo=64, bb=8, thpt=1000.0),
+            dict(ii=128, oo=64, bb=8, thpt=float("nan"))]
+    with pytest.raises(ValueError, match=r"'thpt'.*non-finite.*row 1"):
+        Dataset.from_rows(rows)
+    rows[1]["thpt"] = float("inf")
+    with pytest.raises(ValueError, match="non-finite"):
+        Dataset.from_rows(rows)
+    ds = Dataset.from_rows(rows, require_finite=None)   # corruption path
+    assert len(ds) == 2 and np.isinf(ds["thpt"][1])
+    # string key columns never trip the finite check
+    ok = Dataset.from_rows([dict(model="m", ii=1, oo=2, bb=3, thpt=4.0)])
+    assert len(ok) == 1
+
+
+def test_windows_to_dataset_drops_nonfinite_with_warning(setup,
+                                                         monkeypatch):
+    good = WindowSummary(t0=0.0, t1=5.0, ii=256, oo=128, bb=8.0,
+                         thpt=1200.0, n_completions=4)
+    bad = WindowSummary(t0=5.0, t1=10.0, ii=256, oo=128, bb=8.0,
+                        thpt=float("nan"), n_completions=4)
+    monkeypatch.setattr(adapter, "summarize_windows",
+                        lambda *a, **kw: [good, bad])
+    dummy = SimResult(records=[], steps=[], sim_end_s=10.0, n_events=0,
+                      replica_seconds=10.0, controls=[])
+    with pytest.warns(RuntimeWarning, match="dropped 1 non-finite"):
+        ds = windows_to_dataset(dummy, setup, "llama3.1-8b")
+    assert len(ds) == 1 and float(ds["thpt"][0]) == pytest.approx(1200.0)
+    with pytest.raises(ValueError, match="1 non-finite"):
+        windows_to_dataset(dummy, setup, "llama3.1-8b",
+                           on_nonfinite="raise")
+    monkeypatch.setattr(adapter, "summarize_windows",
+                        lambda *a, **kw: [bad])
+    with pytest.warns(RuntimeWarning):
+        with pytest.raises(ValueError, match="no steady-state"):
+            windows_to_dataset(dummy, setup, "llama3.1-8b")

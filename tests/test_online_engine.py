@@ -421,6 +421,79 @@ def test_online_key_mismatch_raises():
         eng.ingest(bad)
 
 
+# ----------------------------------------------- robust-ingestion gate
+def test_gate_quarantines_with_reasons():
+    eng = OnlineALA(_small_cfg(gate=True))
+    eng.ingest(_ds("m-a", 40, 1), n_estimators=10)
+    combo = eng.combos[0]
+    clean = _rows("m-a", 6, 2)
+    nan_row = dict(clean[0], thpt=float("nan"))
+    dup_row = dict(clean[1])                      # exact copy in same delta
+    poison = dict(clean[2], thpt=clean[2]["thpt"] * 50.0)
+    delta = Dataset.from_rows(clean + [nan_row, dup_row, poison],
+                              require_finite=None)
+    rep = eng.ingest(delta, n_estimators=10)
+    assert rep.n_quarantined >= 3
+    by_reason = {}
+    for q in eng.quarantine:
+        by_reason.setdefault(q.reason, []).append(q.row)
+    assert set(by_reason) <= {"nonfinite", "duplicate", "outlier"}
+    assert any(not np.isfinite(r["thpt"]) for r in by_reason["nonfinite"])
+    assert any(r["thpt"] == dup_row["thpt"]
+               for r in by_reason["duplicate"])
+    assert any(r["thpt"] == poison["thpt"]       # 50x scale poison caught
+               for r in by_reason["outlier"])
+    assert np.isfinite(eng.predict(_ds("m-a", 10, 3))).all()
+
+
+def test_gate_quarantine_parity_with_prefiltered_stream():
+    """Ingesting a fault-corrupted window stream through the gate must
+    land on exactly the state a perfect pre-filter would produce: the
+    gate is a deterministic function of the (identical) registry state,
+    so predictions and refit generations match bit-for-bit."""
+    from repro.serving.faults import FaultConfig, injector
+
+    base = _ds("m-a", 40, 1)
+    delta = _rows("m-a", 30, 2)
+    corrupted, rep = injector(FaultConfig(
+        seed=6, drop_p=0.1, dup_p=0.15, poison_nan_p=0.15)).corrupt_rows(
+            delta)
+    assert rep.n_dropped and rep.n_duplicated and rep.n_poisoned
+    eng_a = OnlineALA(_small_cfg(gate=True))
+    eng_a.ingest(base, n_estimators=10)
+    rep_a = eng_a.ingest(Dataset.from_rows(corrupted, require_finite=None),
+                         n_estimators=10)
+    eng_b = OnlineALA(_small_cfg(gate=True))
+    eng_b.ingest(base, n_estimators=10)
+    eng_b.ingest(Dataset.from_rows(rep.clean_rows), n_estimators=10)
+    assert rep_a.n_quarantined >= rep.n_poisoned + rep.n_duplicated
+    combo = eng_a.combos[0]
+    assert eng_a.generation_of(combo) == eng_b.generation_of(combo)
+    probe = _ds("m-a", 20, 5)
+    np.testing.assert_array_equal(eng_a.predict(probe),
+                                  eng_b.predict(probe))
+    ea, da, ca = eng_a.estimate(probe, backend="numpy")
+    eb, db, cb = eng_b.estimate(probe, backend="numpy")
+    np.testing.assert_array_equal(ea, eb)
+    np.testing.assert_array_equal(ca, cb)
+
+
+def test_nonfinite_rows_filtered_even_without_gate():
+    """The NaN/inf filter is not optional: an ungated engine must still
+    refuse non-finite telemetry (one NaN poisons every downstream fit)."""
+    eng = OnlineALA(_small_cfg())                 # gate defaults off
+    eng.ingest(_ds("m-a", 40, 1), n_estimators=10)
+    clean = _rows("m-a", 8, 2)
+    bad = [dict(clean[0], thpt=float("nan")),
+           dict(clean[1], thpt=float("inf")),
+           dict(clean[2], thpt=-10.0)]           # non-positive: unusable
+    rep = eng.ingest(Dataset.from_rows(clean + bad, require_finite=None),
+                     n_estimators=10)
+    assert rep.n_quarantined == 3
+    assert all(q.reason == "nonfinite" for q in eng.quarantine)
+    assert np.isfinite(eng.predict(_ds("m-a", 10, 3))).all()
+
+
 # ----------------------------------------------- autoscaler recalibration
 def _obs(now, measured, batch_cap=64):
     return Observation(now=now, window_s=2.0, n_arrivals=10, mean_ii=256.0,
