@@ -139,6 +139,74 @@ def decode_step_time(setup: ServingSetup, bb: float, context: float) -> float:
     return decode_step_time_group(setup, np.full(int(round(bb)), context))
 
 
+def decode_time_fn(setup: ServingSetup, xp=np):
+    """Vectorized closure for ``decode_step_time_group``.
+
+    The group step time depends on the batch only through ``bb`` (its
+    size) and ``ctx_sum`` (summed context lengths) — every term above is
+    linear in one of the two.  The returned ``f(bb, ctx_sum)`` evaluates
+    the identical expression over arrays, so for integer-valued inputs it
+    matches the scalar reference to ~1 ulp (float64 sums of integers
+    below 2**53 are exact).  Entries with ``bb == 0`` cost 0.
+
+    ``xp`` selects the array namespace: the default ``numpy``, or
+    ``jax.numpy`` to build a jittable version (the fleet engine's
+    ``traj_backend="jax"``; note jax defaults to float32).
+    """
+    cfg, hw, chips = setup.cfg, setup.hw, setup.chips
+    attn, mamba, sl, ml, dense, moe = _per_layer_counts(cfg)
+    # float constants: exact below 2**53, and required for the jax
+    # namespace (large Python ints overflow jax's default int32)
+    n_active = float(cfg.param_count(active_only=True))
+    kv_tok = float(kv_bytes_per_token(cfg, setup.dtype_bytes))
+    st = float(state_bytes(cfg, setup.dtype_bytes))
+    c_flops = 1.0 / (chips * hw.peak_flops * hw.mfu_prefill)
+    c_mem = 1.0 / (chips * hw.hbm_bw * hw.mfu_decode)
+    attn_flops = float(2 * 2 * attn * cfg.n_heads * cfg.d_head)
+    coll_per_bb = (2 * cfg.n_layers * cfg.d_model * setup.dtype_bytes
+                   * 2 * (chips - 1) / max(chips, 1))
+    moe_per_bb = float(2 * moe * cfg.d_model * setup.dtype_bytes)
+    eff = setup.framework_eff
+    # weights_read_bytes, with the model constants hoisted out of the
+    # closure (the fleet engine calls f thousands of times); the FP
+    # expression order matches the scalar reference exactly
+    n_dense_equiv = cfg.param_count(active_only=False)
+    if moe == 0:
+        wread_const = float(n_dense_equiv * setup.dtype_bytes)
+
+        def wread(bb):
+            return wread_const
+    else:
+        e, k = float(cfg.n_experts), float(cfg.top_k)
+        expert_params = 3 * cfg.d_model * cfg.expert_d_ff
+        moe_fixed = float(n_dense_equiv - moe * cfg.n_experts
+                          * expert_params)
+        moe_read_coeff = float(moe * expert_params)
+        decay = 1 - 1 / e
+
+        def wread(bb):
+            hit = e * (1 - decay ** (bb * k))
+            moe_read = hit * moe_read_coeff
+            return (moe_fixed + moe_read) * setup.dtype_bytes
+
+    def f(bb, ctx_sum):
+        bb = xp.asarray(bb)
+        ctx_sum = xp.asarray(ctx_sum)
+        t_compute = (2 * n_active * bb + attn_flops * ctx_sum) * c_flops
+        mem = (wread(bb) + ctx_sum * kv_tok + bb * st)
+        t_mem = mem * c_mem
+        if chips > 1:
+            t_ici = coll_per_bb * bb / (hw.ici_bw * hw.ici_eff)
+            if moe:
+                t_ici = t_ici + moe_per_bb * bb / (hw.ici_bw * hw.ici_eff)
+        else:
+            t_ici = xp.zeros_like(t_compute)
+        out = xp.maximum(xp.maximum(t_compute, t_mem), t_ici) / eff
+        return xp.where(bb > 0, out, 0.0)
+
+    return f
+
+
 def prefill_step_time(setup: ServingSetup, prompt_lens) -> float:
     """One prefill iteration over a group of prompts of given lengths.
 
@@ -162,6 +230,46 @@ def prefill_step_time(setup: ServingSetup, prompt_lens) -> float:
 
 def prefill_time(setup: ServingSetup, ii: float, bb: float) -> float:
     return prefill_step_time(setup, np.full(int(round(bb)), ii))
+
+
+def prefill_time_fn(setup: ServingSetup):
+    """Vectorized closure for ``prefill_step_time``.
+
+    The group prefill time depends only on ``tok_sum`` (summed prompt
+    lengths) and ``sq_sum`` (summed squared prompt lengths); the returned
+    ``f(tok_sum, sq_sum)`` evaluates the scalar reference's expression
+    over arrays (bit-exact for integer-valued sums).  Entries with
+    ``tok_sum == 0`` cost 0.
+    """
+    cfg, hw, chips = setup.cfg, setup.hw, setup.chips
+    attn, *_ = _per_layer_counts(cfg)
+    n_active = cfg.param_count(active_only=True)
+    kv_tok = kv_bytes_per_token(cfg, setup.dtype_bytes)
+    wread = weights_read_bytes(cfg, 1e9, setup.dtype_bytes)
+    c_flops = 1.0 / (chips * hw.peak_flops * hw.mfu_prefill)
+    c_mem = 1.0 / (chips * hw.hbm_bw * hw.mfu_decode)
+    attn_flops = 2 * 2 * attn * cfg.n_heads * cfg.d_head
+    eff = setup.framework_eff
+
+    def f(tok_sum, sq_sum):
+        if isinstance(tok_sum, float):
+            # scalar fast path: identical IEEE-double expression, no
+            # array round-trip (hot in the fleet engine's prefill starts)
+            if tok_sum <= 0:
+                return 0.0
+            t_compute = (2 * n_active * tok_sum
+                         + attn_flops * sq_sum / 2) * c_flops
+            t_mem = (wread + tok_sum * kv_tok) * c_mem
+            return max(t_compute, t_mem) / eff
+        tok_sum = np.asarray(tok_sum, np.float64)
+        sq_sum = np.asarray(sq_sum, np.float64)
+        t_compute = (2 * n_active * tok_sum
+                     + attn_flops * sq_sum / 2) * c_flops
+        t_mem = (wread + tok_sum * kv_tok) * c_mem
+        out = np.maximum(t_compute, t_mem) / eff
+        return np.where(tok_sum > 0, out, 0.0)
+
+    return f
 
 
 def throughput(setup: ServingSetup, ii: float, oo: float, bb: float) -> float:

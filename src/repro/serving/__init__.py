@@ -1,7 +1,11 @@
 # Trace-driven continuous-batching serving simulator with ALA-in-the-loop
 # autoscaling.  Layers:
-#   traces     — workload trace generators (arrival processes x shape mixes)
+#   traces     — workload trace generators (arrival processes x shape
+#                mixes; multi-tenant fleet traces with diurnal/flash
+#                envelopes and per-tenant SLO tiers)
 #   simulator  — discrete-event continuous-batching replica fleet
+#   fleet      — time-bucketed vectorized engine for fleet-scale runs
+#                (100k+ requests; simulate(..., engine="fleet"))
 #   autoscaler — control policies (static baseline, ALA-guided; consumes
 #                core.online drift signals for mid-run recalibration)
 #   adapter    — steady-state windows -> core.dataset.Dataset rows

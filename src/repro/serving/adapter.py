@@ -65,15 +65,8 @@ def _window_overlaps(t0: float, t1: float, window_s: float, n_win: int):
         yield w, ov / dur
 
 
-def summarize_windows(result: SimResult, window_s: float = 5.0,
-                      min_completions: int = 2) -> List[WindowSummary]:
-    if window_s <= 0:
-        raise ValueError("window_s must be positive")
-    horizon = result.sim_end_s
-    n_win = max(int(np.ceil(horizon / window_s)), 1)
-    # a step spanning a window boundary splits by overlap fraction —
-    # crediting it entirely to the window holding t_end would bias both
-    # per-window busy time and thpt (tokens / busy second)
+def _accumulate_slow(result: SimResult, window_s: float, n_win: int):
+    """Reference per-step accumulation over ``result.steps`` records."""
     busy = np.zeros(n_win)
     toks = np.zeros(n_win)
     dec_t = np.zeros(n_win)
@@ -87,26 +80,102 @@ def summarize_windows(result: SimResult, window_s: float = 5.0,
             if s.kind == "decode":
                 dec_t[w] += d
                 bb_wt[w] += s.bb * d
-    comps = [[] for _ in range(n_win)]
+    n_comp = np.zeros(n_win, np.int64)
+    ii_sum = np.zeros(n_win)
+    oo_sum = np.zeros(n_win)
     for r in result.completed:
         w = min(int(r.done_s / window_s), n_win - 1)
-        comps[w].append(r)
+        n_comp[w] += 1
+        ii_sum[w] += r.ii
+        oo_sum[w] += r.oo
+    return busy, toks, dec_t, bb_wt, n_comp, ii_sum, oo_sum
+
+
+def _accumulate_fast(result, window_s: float, n_win: int):
+    """Array accumulation over a ``FleetSimResult``'s raw columns —
+    identical window semantics to ``_accumulate_slow`` (steps spanning
+    more than one window fall back to the per-step overlap split; they
+    are a ``duration / window_s`` fraction of the stream)."""
+    a = result.step_arrays
+    t1 = a["t_end"]
+    d = a["duration_s"]
+    tok = a["tokens_out"].astype(np.float64)
+    dec = a["kind"] == 1
+    t0 = t1 - d
+    w0 = np.clip(np.floor(t0 / window_s).astype(np.int64), 0, n_win - 1)
+    w1 = np.clip(np.ceil(t1 / window_s).astype(np.int64) - 1, 0,
+                 n_win - 1)
+    busy = np.zeros(n_win)
+    toks = np.zeros(n_win)
+    dec_t = np.zeros(n_win)
+    bb_wt = np.zeros(n_win)
+    zero = d <= 0
+    if zero.any():                        # zero-duration span: window of t1
+        wz = np.clip((t1[zero] / window_s).astype(np.int64), 0, n_win - 1)
+        np.add.at(toks, wz, tok[zero])
+    one = ~zero & (w1 <= w0)              # span inside a single window
+    np.add.at(busy, w0[one], d[one])
+    np.add.at(toks, w0[one], tok[one])
+    oned = one & dec
+    np.add.at(dec_t, w0[oned], d[oned])
+    np.add.at(bb_wt, w0[oned], a["bb"][oned] * d[oned])
+    multi = ~zero & (w1 > w0)             # boundary straddlers: exact split
+    for i in np.flatnonzero(multi):
+        for w, frac in _window_overlaps(float(t0[i]), float(t1[i]),
+                                        window_s, n_win):
+            dd = frac * float(d[i])
+            busy[w] += dd
+            toks[w] += frac * float(tok[i])
+            if dec[i]:
+                dec_t[w] += dd
+                bb_wt[w] += float(a["bb"][i]) * dd
+    q = result.req
+    comp = np.isfinite(q["done_s"])
+    wc = np.minimum((q["done_s"][comp] / window_s).astype(np.int64),
+                    n_win - 1)
+    n_comp = np.bincount(wc, minlength=n_win)
+    ii_sum = np.bincount(wc, weights=q["ii"][comp].astype(np.float64),
+                         minlength=n_win)
+    oo_sum = np.bincount(wc, weights=q["oo"][comp].astype(np.float64),
+                         minlength=n_win)
+    return busy, toks, dec_t, bb_wt, n_comp, ii_sum, oo_sum
+
+
+def summarize_windows(result: SimResult, window_s: float = 5.0,
+                      min_completions: int = 2) -> List[WindowSummary]:
+    if window_s <= 0:
+        raise ValueError("window_s must be positive")
+    horizon = result.sim_end_s
+    if horizon <= 0:
+        # degenerate run (ended at t=0): every window would have zero
+        # duration — emitting them poisons downstream rate math
+        return []
+    n_win = max(int(np.ceil(horizon / window_s)), 1)
+    # a step spanning a window boundary splits by overlap fraction —
+    # crediting it entirely to the window holding t_end would bias both
+    # per-window busy time and thpt (tokens / busy second)
+    if getattr(result, "step_arrays", None) is not None \
+            and getattr(result, "req", None) is not None:
+        acc = _accumulate_fast(result, window_s, n_win)
+    else:
+        acc = _accumulate_slow(result, window_s, n_win)
+    busy, toks, dec_t, bb_wt, n_comp, ii_sum, oo_sum = acc
     out: List[WindowSummary] = []
     for w in range(n_win):
-        cs = comps[w]
-        if len(cs) < min_completions or dec_t[w] <= 0:
+        nc = int(n_comp[w])
+        if nc < min_completions or dec_t[w] <= 0:
             continue
         if busy[w] <= 0 or toks[w] <= 0:
             continue
+        t0, t1 = w * window_s, min((w + 1) * window_s, horizon)
+        if t1 <= t0:                      # zero-duration clipped window
+            continue
         bb = bb_wt[w] / max(dec_t[w], 1e-12)
-        bii, boo = BatchingQueue.bucket(
-            float(np.mean([r.ii for r in cs])),
-            float(np.mean([r.oo for r in cs])))
+        bii, boo = BatchingQueue.bucket(ii_sum[w] / nc, oo_sum[w] / nc)
         out.append(WindowSummary(
-            t0=w * window_s, t1=min((w + 1) * window_s, horizon),
-            ii=bii, oo=boo,
+            t0=t0, t1=t1, ii=bii, oo=boo,
             bb=float(bb), thpt=float(toks[w] / busy[w]),
-            n_completions=len(cs)))
+            n_completions=nc))
     return out
 
 

@@ -92,7 +92,12 @@ class ALAAutoscaler:
     backoff_cap: int = 16             # doubling stops here
     backoff_conf_floor: float = 0.05  # conf below this counts as unreliable
     scale_down_patience: int = 2      # consecutive shrink-wanting ticks
-    # (t, kind) per degradation action: "backoff" | "hold_down"
+    # coarse time-bucketed stepping can deliver a control tick whose
+    # window collapsed to (near) zero width; rates computed over it are
+    # meaningless, so the controller holds the fleet instead
+    min_window_s: float = 1e-6
+    # (t, kind) per degradation action: "backoff" | "hold_down" |
+    # "zero_window"
     degradations: list = dataclasses.field(default_factory=list)
     _resid: collections.deque = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=64), repr=False)
@@ -170,6 +175,13 @@ class ALAAutoscaler:
 
     def control(self, obs: Observation) -> Action:
         self._refresh_online()
+        if obs.window_s < self.min_window_s:
+            # degenerate zero-width window (coarse bucketed stepping):
+            # arrival_rate/backlog terms would divide by ~0 — hold
+            self.degradations.append((obs.now, "zero_window"))
+            return Action(n_replicas=max(obs.n_active_replicas,
+                                         self.min_replicas),
+                          batch_cap=obs.batch_cap)
         if obs.n_arrivals == 0:
             # idle window: hold the fleet, nothing to infer demand from
             return Action(n_replicas=obs.n_active_replicas,

@@ -175,6 +175,18 @@ class FaultInjector:
                 break
         return 1.0
 
+    def straggler_boundaries(self, replica: int) -> np.ndarray:
+        """Sorted times at which ``slow_factor`` changes for a replica.
+
+        The vectorized fleet engine segments its batched decode runs at
+        these boundaries so every step still picks up the slow factor in
+        force at its *start* time — the event-heap semantics."""
+        out: List[float] = []
+        for w in self._windows.get(replica, ()):
+            out.append(w.t0)
+            out.append(w.t1)
+        return np.array(sorted(out), np.float64)
+
     # -- telemetry corruption -----------------------------------------------
     def corrupt_rows(self, rows: List[Dict]
                      ) -> Tuple[List[Dict], CorruptionReport]:

@@ -70,6 +70,10 @@ class SimConfig:
     faults: Optional[object] = None   # FaultInjector; None -> fault-free
     max_retries: int = 2              # crash requeues per request
     shed_after_s: Optional[float] = None  # age limit at requeue; None -> off
+    # vectorized fleet engine (see repro.serving.fleet): admissions are
+    # quantized to bucket boundaries — the documented parity tolerance
+    bucket_s: float = 0.25
+    traj_backend: str = "numpy"       # "numpy" | "jax" decode-run math
 
 
 @dataclasses.dataclass
@@ -78,6 +82,7 @@ class RequestRecord:
     ii: int
     oo: int
     arrival_s: float
+    tenant: str = ""
     replica: int = -1
     first_token_s: Optional[float] = None
     done_s: Optional[float] = None
@@ -319,24 +324,113 @@ class SimResult:
         that shed half its traffic report a rosy p95."""
         if on_missing not in ("inf", "drop"):
             raise ValueError(f"on_missing {on_missing!r}: 'inf' or 'drop'")
-        vals = [float("inf") if (r.shed or r.first_token_s is None)
-                else r.ttft_s for r in self.records]
+        vals = self._ttft_values()
         if on_missing == "drop":
-            vals = [v for v in vals if np.isfinite(v)]
-        if not vals:
-            return float("inf")
-        # manual linear interpolation: np.percentile returns NaN when the
-        # quantile straddles the inf mass (inf - inf inside its lerp);
-        # the answer there is inf, and finite data matches numpy exactly
-        svals = np.sort(np.asarray(vals, np.float64))
-        pos = (len(svals) - 1) * q / 100.0
-        lo = int(np.floor(pos))
-        frac = pos - lo
-        if frac == 0.0:
-            return float(svals[lo])
-        if not np.isfinite(svals[lo + 1]):
-            return float("inf")
-        return float(svals[lo] * (1.0 - frac) + svals[lo + 1] * frac)
+            vals = vals[np.isfinite(vals)]
+        return percentile_with_inf(vals, q)
+
+    # -- fleet-level meta-metrics -------------------------------------------
+    def _ttft_values(self) -> np.ndarray:
+        """Per-admitted-request TTFT with inf for shed / no-first-token —
+        the miss convention shared by slo_attainment and percentiles."""
+        return np.array([float("inf") if (r.shed or r.first_token_s is None)
+                         else r.ttft_s for r in self.records], np.float64)
+
+    def per_tenant(self, slo_map: Optional[Dict[str, float]] = None
+                   ) -> Dict[str, Dict[str, float]]:
+        """Per-tenant request accounting, TTFT tail and SLO attainment.
+
+        ``slo_map`` maps tenant name -> TTFT SLO seconds (e.g.
+        ``FleetTraceConfig.slo_map``); tenants absent from the map get
+        ``attainment = nan``.  Shed requests count as misses and as inf
+        TTFT, exactly like the fleet-wide metrics.  ``goodput_share`` is
+        the tenant's fraction of completed output tokens."""
+        groups: Dict[str, List[RequestRecord]] = {}
+        for r in self.records:
+            groups.setdefault(r.tenant, []).append(r)
+        total_tok = sum(r.oo for r in self.completed)
+        out: Dict[str, Dict[str, float]] = {}
+        for ten in sorted(groups):
+            recs = groups[ten]
+            comp = [r for r in recs if r.completed]
+            vals = np.array(
+                [float("inf") if (r.shed or r.first_token_s is None)
+                 else r.ttft_s for r in recs], np.float64)
+            slo = slo_map.get(ten) if slo_map else None
+            att = (float(np.mean(vals <= slo)) if slo is not None
+                   else float("nan"))
+            tok = sum(r.oo for r in comp)
+            out[ten] = {
+                "n_requests": len(recs),
+                "n_completed": len(comp),
+                "n_shed": sum(1 for r in recs if r.shed),
+                "n_retries": sum(r.retries for r in recs),
+                "ttft_slo_s": float(slo) if slo is not None
+                else float("nan"),
+                "attainment": att,
+                "ttft_p50_s": percentile_with_inf(vals, 50.0),
+                "ttft_p95_s": percentile_with_inf(vals, 95.0),
+                "ttft_p99_s": percentile_with_inf(vals, 99.0),
+                "goodput_share": tok / total_tok if total_tok else 0.0,
+            }
+        return out
+
+    def meta_metrics(self, slo_map: Optional[Dict[str, float]] = None
+                     ) -> Dict[str, object]:
+        """Fleet-level scorecard (after "Meta-Metrics and Best Practices
+        for System-Level Inference Performance Benchmarking"): request
+        accounting, goodput, availability, shed/retry rates, per-tenant
+        breakdown, Jain fairness across per-tenant attainment, and the
+        fleet attainment where each request is scored against its own
+        tenant's SLO tier."""
+        pt = self.per_tenant(slo_map)
+        acc = self.accounting()
+        n = max(acc["admitted"], 1)
+        att = [v["attainment"] for v in pt.values()
+               if np.isfinite(v["attainment"])]
+        if att and sum(a * a for a in att) > 0:
+            jain = (sum(att) ** 2) / (len(att) * sum(a * a for a in att))
+        else:
+            jain = 1.0
+        if slo_map:
+            fleet_att = sum(v["attainment"] * v["n_requests"]
+                            for v in pt.values()
+                            if np.isfinite(v["attainment"])) / n
+        else:
+            fleet_att = float("nan")
+        return {
+            "n_requests": acc["admitted"],
+            "n_completed": acc["completed"],
+            "n_shed": acc["shed"],
+            "shed_rate": acc["shed"] / n,
+            "retry_rate": self.n_retries / n,
+            "goodput_tok_s": self.goodput_tok_s,
+            "availability": self.availability,
+            "replica_seconds": self.replica_seconds,
+            "fleet_attainment": fleet_att,
+            "jain_fairness": float(jain),
+            "per_tenant": pt,
+        }
+
+
+def percentile_with_inf(vals: np.ndarray, q: float) -> float:
+    """Linear-interpolation percentile that tolerates an inf mass.
+
+    ``np.percentile`` returns NaN when the quantile straddles infs
+    (inf - inf inside its lerp); the correct answer there is inf, and on
+    finite data this matches numpy exactly."""
+    vals = np.asarray(vals, np.float64)
+    if vals.size == 0:
+        return float("inf")
+    svals = np.sort(vals)
+    pos = (len(svals) - 1) * q / 100.0
+    lo = int(np.floor(pos))
+    frac = pos - lo
+    if frac == 0.0:
+        return float(svals[lo])
+    if not np.isfinite(svals[lo + 1]):
+        return float("inf")
+    return float(svals[lo] * (1.0 - frac) + svals[lo + 1] * frac)
 
 
 class FleetSimulator:
@@ -435,7 +529,7 @@ class FleetSimulator:
 
         def route(req: TraceRequest):
             rec = RequestRecord(rid=req.rid, ii=req.ii, oo=req.oo,
-                                arrival_s=req.arrival_s)
+                                arrival_s=req.arrival_s, tenant=req.tenant)
             records[req.rid] = rec
             if req.ii + req.oo > self.kv_cap:
                 # can never fit any replica's KV: shed at admission
@@ -623,5 +717,17 @@ class FleetSimulator:
                          fault_log=fault_log)
 
 
-def simulate(trace: Trace, cfg: SimConfig, policy=None) -> SimResult:
-    return FleetSimulator(trace, cfg, policy).run()
+def simulate(trace: Trace, cfg: SimConfig, policy=None,
+             engine: str = "heap") -> SimResult:
+    """Run a trace through one of the two engines.
+
+    ``engine="heap"`` is the event-heap reference above; ``"fleet"`` is
+    the vectorized time-bucketed engine (``repro.serving.fleet``) — same
+    semantics, admissions quantized to ``cfg.bucket_s`` boundaries, and
+    orders of magnitude faster on large traces."""
+    if engine == "heap":
+        return FleetSimulator(trace, cfg, policy).run()
+    if engine == "fleet":
+        from repro.serving.fleet import VectorFleetSimulator
+        return VectorFleetSimulator(trace, cfg, policy).run()
+    raise KeyError(f"unknown engine {engine!r}; known: heap, fleet")

@@ -1,0 +1,99 @@
+"""Shared invariant checks for serving-simulator results.
+
+Both engines (the event-heap reference and the vectorized fleet engine)
+must satisfy these regardless of workload, faults, or policy — the
+engine-specific suites call ``assert_sim_invariants`` on every result
+they produce so a regression in either engine trips the same net.
+"""
+import numpy as np
+
+
+def assert_sim_invariants(result, trace=None):
+    """Engine-independent sanity of one ``SimResult``.
+
+    * request conservation: completed + shed == admitted, no overlap;
+    * per-request timeline ordering: arrival <= first token <= done,
+      and positive token counts;
+    * shed bookkeeping: shed requests carry a reason and a shed time,
+      completed ones carry neither;
+    * metric cross-consistency: ``slo_attainment`` at +inf equals the
+      completed-with-first-token fraction, percentiles are monotone in
+      q, and goodput/replica-seconds are non-negative and finite;
+    * step stream: durations non-negative, batch sizes positive, step
+      end times within the simulated span.
+    """
+    result.check_conservation()
+    acc = result.accounting()
+    assert acc["completed"] + acc["shed"] == acc["admitted"]
+    if trace is not None:
+        assert acc["admitted"] == len(trace)
+
+    n_first = 0
+    for r in result.records:
+        assert r.ii > 0 and r.oo > 0
+        if r.first_token_s is not None:
+            n_first += 1
+            assert r.first_token_s >= r.arrival_s
+        if r.done_s is not None:
+            assert not r.shed
+            assert r.shed_reason == "" and r.shed_s is None
+            assert r.first_token_s is not None
+            assert r.done_s >= r.first_token_s
+        if r.shed:
+            assert r.done_s is None
+            assert r.shed_reason in ("oversized", "retry_budget",
+                                     "deadline", "unserved")
+            assert r.shed_s is not None and r.shed_s >= r.arrival_s
+        assert r.retries >= 0
+
+    # attainment at an arbitrarily large finite SLO counts exactly the
+    # requests that got a first token and were not shed (shed / no-first
+    # requests carry an infinite TTFT)
+    n = acc["admitted"]
+    if n:
+        att_huge = result.slo_attainment(1e12)
+        served = sum(1 for r in result.records
+                     if r.first_token_s is not None and not r.shed)
+        assert att_huge == served / n
+        ps = [result.ttft_percentile(q) for q in (10.0, 50.0, 90.0, 99.0)]
+        assert all(b >= a or (np.isinf(a) and np.isinf(b))
+                   for a, b in zip(ps, ps[1:]))
+
+    assert result.replica_seconds >= 0.0
+    assert 0.0 <= result.availability <= 1.0
+    assert np.isfinite(result.goodput_tok_s) and result.goodput_tok_s >= 0
+    assert result.sim_end_s >= result.t_start
+
+    for s in result.steps:
+        assert s.duration_s >= 0.0
+        assert s.bb > 0
+        assert s.kind in ("prefill", "decode")
+        assert s.t_end <= result.sim_end_s + 1e-9
+
+
+def assert_per_tenant_consistent(result, slo_map=None):
+    """Per-tenant splits must re-aggregate to the fleet totals."""
+    per = result.per_tenant(slo_map=slo_map)
+    acc = result.accounting()
+    assert sum(d["n_requests"] for d in per.values()) == acc["admitted"]
+    assert sum(d["n_completed"] for d in per.values()) == acc["completed"]
+    assert sum(d["n_shed"] for d in per.values()) == acc["shed"]
+    shares = [d["goodput_share"] for d in per.values()]
+    if acc["completed"]:
+        assert abs(sum(shares) - 1.0) < 1e-9
+    for d in per.values():
+        assert 0.0 <= d["goodput_share"] <= 1.0 + 1e-12
+        if np.isfinite(d["ttft_slo_s"]):
+            assert 0.0 <= d["attainment"] <= 1.0
+    meta = result.meta_metrics(slo_map=slo_map)
+    assert meta["n_requests"] == acc["admitted"]
+    assert meta["n_shed"] == acc["shed"]
+    assert 0.0 <= meta["jain_fairness"] <= 1.0 + 1e-12
+    if slo_map:
+        # fleet attainment is the request-weighted tenant average
+        num = sum(d["attainment"] * d["n_requests"] for d in per.values()
+                  if np.isfinite(d["attainment"]))
+        den = sum(d["n_requests"] for d in per.values()
+                  if np.isfinite(d["attainment"]))
+        if den:
+            assert abs(meta["fleet_attainment"] - num / den) < 1e-9

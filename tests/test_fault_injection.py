@@ -6,6 +6,7 @@ metric consistency between ``slo_attainment`` and ``ttft_percentile``.
 import numpy as np
 import pytest
 
+from _sim_invariants import assert_sim_invariants
 from repro.configs import get_config
 from repro.core.dataset import Dataset
 from repro.perfmodel.simulator import ServingSetup
@@ -85,7 +86,7 @@ def test_corrupt_rows_deterministic_and_accounted():
 # ------------------------------------------------- crash/retry conservation
 def test_crash_sim_conservation_and_availability(crash_results):
     res, _ = crash_results
-    res.check_conservation()
+    assert_sim_invariants(res)
     acc = res.accounting()
     assert acc["admitted"] == acc["completed"] + acc["shed"]
     assert res.n_retries > 0                # crashes displaced work

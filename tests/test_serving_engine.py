@@ -11,6 +11,7 @@ from repro.perfmodel.simulator import (ServingSetup, decode_step_time,
                                        kv_capacity_tokens, prefill_step_time,
                                        prefill_time, sample_throughput)
 from repro.perfmodel.tpu import TPU_V5E
+from _sim_invariants import assert_sim_invariants
 from repro.serving.adapter import summarize_windows, windows_to_dataset
 from repro.serving.autoscaler import ALAAutoscaler, StaticPolicy
 from repro.serving.simulator import (Action, Observation, SimConfig,
@@ -84,6 +85,7 @@ def test_shape_mix_and_roundtrip():
 # ---------------------------------------------------------------- simulator
 def test_simulator_completes_and_orders_metrics(setup, chat_trace):
     res = simulate(chat_trace, SimConfig(setup=setup, n_replicas=2))
+    assert_sim_invariants(res, chat_trace)
     assert len(res.records) == len(chat_trace)
     assert len(res.completed) == len(chat_trace)
     for r in res.completed:

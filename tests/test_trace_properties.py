@@ -1,0 +1,129 @@
+"""Property tests for ``repro.serving.traces`` (hypothesis-driven where
+available — see ``_hypothesis_compat``)."""
+import numpy as np
+
+from _hypothesis_compat import given, settings, st
+from repro.serving.traces import (FleetTraceConfig, TenantConfig, Trace,
+                                  TraceConfig, TraceRequest,
+                                  make_fleet_trace, make_trace, mix)
+
+
+def _trace_cfg(arrival, rate, horizon, seed):
+    return TraceConfig(arrival=arrival, rate=rate, horizon_s=horizon,
+                       seed=seed)
+
+
+@settings(max_examples=30, deadline=None)
+@given(arrival=st.sampled_from(["poisson", "gamma", "mmpp"]),
+       rate=st.floats(0.5, 12.0),
+       horizon=st.floats(5.0, 60.0),
+       seed=st.integers(0, 2**31 - 1))
+def test_make_trace_well_formed(arrival, rate, horizon, seed):
+    tr = make_trace(_trace_cfg(arrival, rate, horizon, seed))
+    arr = tr.arrivals
+    # arrivals sorted inside the horizon, non-negative interarrivals
+    assert (arr >= 0.0).all()
+    assert (arr < tr.horizon_s).all()
+    assert (np.diff(arr) >= 0.0).all()
+    assert [r.rid for r in tr.requests] == list(range(len(tr)))
+    for r in tr.requests:
+        assert r.ii >= 1 and r.oo >= 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(arrival=st.sampled_from(["poisson", "gamma", "mmpp"]),
+       seed=st.integers(0, 2**31 - 1))
+def test_same_seed_same_trace(arrival, seed):
+    cfg = _trace_cfg(arrival, 4.0, 20.0, seed)
+    a, b = make_trace(cfg), make_trace(cfg)
+    assert a.to_arrays()["arrival_s"].tobytes() \
+        == b.to_arrays()["arrival_s"].tobytes()
+    assert [(r.ii, r.oo) for r in a.requests] \
+        == [(r.ii, r.oo) for r in b.requests]
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_to_from_arrays_roundtrip_bit_exact(seed):
+    tr = make_trace(_trace_cfg("gamma", 5.0, 25.0, seed))
+    arrs = tr.to_arrays()
+    back = Trace.from_arrays(arrival_s=arrs["arrival_s"], ii=arrs["ii"],
+                             oo=arrs["oo"], tenant=arrs["tenant"],
+                             horizon_s=tr.horizon_s)
+    b = back.to_arrays()
+    assert arrs["arrival_s"].tobytes() == b["arrival_s"].tobytes()
+    assert arrs["ii"].tobytes() == b["ii"].tobytes()
+    assert arrs["oo"].tobytes() == b["oo"].tobytes()
+    assert list(arrs["tenant"]) == list(b["tenant"])
+    assert back.horizon_s == tr.horizon_s
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       cuts=st.lists(st.floats(0.01, 0.99), min_size=1, max_size=4,
+                     unique=True))
+def test_slice_partition_preserves_requests(seed, cuts):
+    tr = make_trace(_trace_cfg("poisson", 6.0, 30.0, seed))
+    bounds = [0.0] + sorted(c * tr.horizon_s for c in cuts) \
+        + [tr.horizon_s]
+    parts = [tr.slice(a, b) for a, b in zip(bounds, bounds[1:])]
+    assert sum(len(p) for p in parts) == len(tr)
+    # every part re-numbers rids densely but keeps payloads; the
+    # concatenated payloads equal the original's (arrival order)
+    flat = [(r.arrival_s, r.ii, r.oo) for p in parts for r in p.requests]
+    assert flat == [(r.arrival_s, r.ii, r.oo) for r in tr.requests]
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       amp=st.floats(0.0, 0.9),
+       crowds=st.integers(0, 3))
+def test_fleet_trace_well_formed_and_deterministic(seed, amp, crowds):
+    fcfg = FleetTraceConfig(tenants=(
+        TenantConfig(name="a",
+                     trace=_trace_cfg("poisson", 3.0, 30.0, 0),
+                     ttft_slo_s=1.0, diurnal_amp=amp),
+        TenantConfig(name="b",
+                     trace=_trace_cfg("gamma", 2.0, 30.0, 0),
+                     ttft_slo_s=4.0, flash_crowds=crowds,
+                     flash_mult=3.0, flash_dur_s=5.0),
+    ), horizon_s=30.0, seed=seed)
+    t1, t2 = make_fleet_trace(fcfg), make_fleet_trace(fcfg)
+    a1, a2 = t1.to_arrays(), t2.to_arrays()
+    assert a1["arrival_s"].tobytes() == a2["arrival_s"].tobytes()
+    assert list(a1["tenant"]) == list(a2["tenant"])
+    assert set(t1.tenants) <= {"a", "b"}
+    assert (np.diff(t1.arrivals) >= 0.0).all()
+    assert t1.fleet_config is fcfg
+    assert fcfg.slo_map == {"a": 1.0, "b": 4.0}
+    # slicing keeps the fleet config attached
+    assert t1.slice(0.0, 10.0).fleet_config is fcfg
+
+
+def test_envelope_bounds():
+    """The diurnal × flash envelope stays within its documented bounds
+    and ``envelope_max`` really is an upper bound (thinning keep-prob
+    must never exceed 1)."""
+    tc = TenantConfig(name="x", trace=_trace_cfg("poisson", 1.0, 100.0, 0),
+                      diurnal_amp=0.5, flash_crowds=2, flash_mult=4.0,
+                      flash_dur_s=10.0)
+    crowd = np.array([20.0, 60.0])
+    t = np.linspace(0.0, 100.0, 5000)
+    env = tc.envelope(t, crowd)
+    assert (env >= 0.0).all()
+    assert (env <= tc.envelope_max + 1e-12).all()
+    inside = (t >= 20.0) & (t < 30.0)
+    outside = (t >= 40.0) & (t < 55.0)
+    assert env[inside].mean() > env[outside].mean()
+
+
+def test_tenant_round_trip_through_engine_arrays():
+    """Object-dtype tenant column survives to_arrays/from_arrays."""
+    reqs = tuple(TraceRequest(rid=i, arrival_s=float(i), ii=8, oo=4,
+                              tenant=t)
+                 for i, t in enumerate(["x", "y", "x"]))
+    tr = Trace(requests=reqs, horizon_s=4.0)
+    arrs = tr.to_arrays()
+    back = Trace.from_arrays(**arrs, horizon_s=4.0)
+    assert [r.tenant for r in back.requests] == ["x", "y", "x"]
+    assert tr.tenants == ("x", "y")
