@@ -35,6 +35,12 @@ writes a JSON report to results/bench_report.json for EXPERIMENTS.md.
                             concatenated data every epoch: prediction
                             parity + speedup (emits BENCH_online.json;
                             --smoke for CI)
+  transfer_engine         — cross-hardware ALA transfer: per-target
+                            medAPE via the analytic roofline scaler,
+                            strict cross- vs same-hardware confidence
+                            ordering, and a mixed TPU+GPU fleet where
+                            hardware-aware placement beats blind
+                            (emits BENCH_transfer.json; --smoke for CI)
   wallclock_engine        — real JAX engine sweep via bench.harness
                             (honors --grid-ii/--grid-oo/--grid-bb/--reps)
 
@@ -467,7 +473,7 @@ def serving_engine(smoke=None, ttft_slo_s: float = 2.0):
     from repro.core.registry import ModelRegistry
     from repro.perfmodel.simulator import (ServingSetup, sample_throughput,
                                            throughput)
-    from repro.perfmodel.tpu import TPU_V5E
+    from repro.perfmodel.hardware import TPU_V5E
     from repro.serving.adapter import windows_to_dataset
     from repro.serving.autoscaler import ALAAutoscaler, StaticPolicy
     from repro.serving.simulator import SimConfig, simulate
@@ -598,7 +604,7 @@ def fleet_engine(smoke=None):
     heap numbers.  Writes results/BENCH_fleet.json."""
     from repro.configs import get_config
     from repro.perfmodel.simulator import ServingSetup
-    from repro.perfmodel.tpu import TPU_V5E
+    from repro.perfmodel.hardware import TPU_V5E
     from repro.serving.simulator import SimConfig, simulate
     from repro.serving.traces import (FleetTraceConfig, TenantConfig,
                                       TraceConfig, make_fleet_trace, mix)
@@ -711,7 +717,7 @@ def online_engine(smoke=None):
     from repro.core.registry import ModelRegistry
     from repro.perfmodel.simulator import (ServingSetup, sample_throughput,
                                            throughput)
-    from repro.perfmodel.tpu import TPU_V5E
+    from repro.perfmodel.hardware import TPU_V5E
     from repro.serving.adapter import TRACE_BACKEND, windows_to_dataset
     from repro.serving.autoscaler import ALAAutoscaler
     from repro.serving.simulator import SimConfig, simulate
@@ -884,7 +890,7 @@ def fault_engine(smoke=None, ttft_slo_s: float = 2.0):
     from repro.core.online import OnlineALA, OnlineConfig
     from repro.perfmodel.simulator import ServingSetup, sample_throughput, \
         throughput
-    from repro.perfmodel.tpu import TPU_V5E
+    from repro.perfmodel.hardware import TPU_V5E
     from repro.serving.adapter import (TRACE_BACKEND, summarize_windows,
                                        windows_to_rows)
     from repro.serving.autoscaler import ALAAutoscaler, StaticPolicy
@@ -1068,6 +1074,191 @@ def fault_engine(smoke=None, ttft_slo_s: float = 2.0):
     return report
 
 
+def transfer_engine(smoke=None, ttft_slo_s: float = 2.0):
+    """Cross-hardware ALA transfer + heterogeneous fleet placement.
+
+    (a) Fit the registry (+ uncertainty pipeline) on TPU-v5e rows only,
+        then predict every other registered accelerator's ground-truth
+        grid via registry transfer with the analytic roofline scaler —
+        per-target-hardware medAPE.
+    (b) Alg 8 confidence ordering: on *identical* workloads, the
+        transferred (cross-hardware) confidence must be strictly below
+        the same-hardware confidence for every target.
+    (c) Mixed TPU+GPU fleet: the ALA autoscaler placing scale-up
+        replicas by transfer-derated predictions (hardware-aware) vs the
+        same controller cycling the pool blindly — shed-aware SLO
+        attainment / replica-seconds, on both serving engines (parity
+        reported).  Writes results/BENCH_transfer.json."""
+    import itertools
+    from repro.bench.datasets import FRAMEWORKS, _simulate
+    from repro.configs import get_config
+    from repro.core.annealing import SAConfig
+    from repro.core.dataset import Dataset
+    from repro.core.registry import ModelRegistry
+    from repro.perfmodel.hardware import (PROFILES, feature_row,
+                                          hardware_distance, profile)
+    from repro.perfmodel.simulator import (ServingSetup, throughput,
+                                           throughput_batch)
+    from repro.serving.autoscaler import ALAAutoscaler
+    from repro.serving.simulator import SimConfig, simulate
+    from repro.serving.traces import TraceConfig, make_trace, mix
+
+    smoke = OPTS["smoke"] if smoke is None else smoke
+    model = "llama3.1-8b"
+    source = "tpu-v5e"
+    targets = ("tpu-v4", "gpu-a100-80g", "gpu-l4") if smoke else \
+        tuple(sorted(n for n in PROFILES if n != source))
+    chips = 4
+    cfg = get_config(model)
+
+    def setup_of(hw_name: str) -> ServingSetup:
+        return ServingSetup(cfg=cfg, hw=profile(hw_name), chips=chips,
+                            framework_eff=FRAMEWORKS["vllm-jax"])
+
+    grid = list(itertools.product(
+        (128, 512, 2048) if smoke else (128, 256, 512, 1024, 2048),
+        (64, 256) if smoke else (64, 128, 256, 512),
+        (1, 4, 16, 64) if smoke else (1, 2, 4, 8, 16, 32, 64, 128)))
+    reps = 2 if smoke else 3
+    sa_iters = 4 if smoke else 10
+
+    rng = np.random.default_rng(0)
+    src = Dataset.from_rows(_simulate(model, profile(source), grid, reps,
+                                      rng, chips=chips))
+    reg, us_fit = _timed(
+        lambda: ModelRegistry().fit(src, n_estimators=25).fit_uncertainty(
+            src, sa_cfg=SAConfig(n_iters=sa_iters, seed=0, n_chains=4,
+                                 gbt_kw=dict(n_estimators=30,
+                                             learning_rate=0.2,
+                                             max_depth=4)),
+            n_estimators=25))
+    hw_i = reg._active_keys.index("acc")
+
+    def scale_fn(combo, donor, ii, oo, bb):
+        # analytic roofline transfer: the pure-descriptor throughput
+        # ratio between target and donor hardware, per query point
+        return (throughput_batch(setup_of(combo[hw_i]), ii, oo, bb)
+                / throughput_batch(setup_of(donor[hw_i]), ii, oo, bb))
+
+    report = {"smoke": bool(smoke), "source": source, "model": model,
+              "targets": {}}
+    src_med = float(np.median(np.abs(
+        reg.predict(src) - src["thpt"]) / src["thpt"] * 100.0))
+    report["source_median_ape"] = src_med
+    # one shared same-workload query set for the confidence ordering:
+    # identical (ii, oo, bb, thpt) rows relabeled per hardware
+    q_idx = np.random.default_rng(1).choice(
+        len(src), size=min(128, len(src)), replace=False)
+    base_rows = [{k: src[k][i] for k in src.cols} for i in q_idx]
+    _, _, conf_same = reg.estimate(Dataset.from_rows(base_rows))
+    assert (conf_same > 0).all(), "source confidence degenerate"
+    report["conf_same_median"] = float(np.median(conf_same))
+    for tname in targets:
+        tgt = Dataset.from_rows(_simulate(model, profile(tname), grid,
+                                          reps, rng, chips=chips))
+        pred, us_pred = _timed(reg.predict, tgt, transfer=True,
+                               scale_fn=scale_fn)
+        med = float(np.median(np.abs(pred - tgt["thpt"])
+                              / tgt["thpt"] * 100.0))
+        hw_cols = feature_row(tname)
+        relab = Dataset.from_rows([{**r, "acc": tname, **hw_cols}
+                                   for r in base_rows])
+        _, _, conf_x = reg.estimate(relab, transfer=True)
+        strict = bool((conf_x < conf_same).all())
+        d_hw = hardware_distance(source, tname)
+        report["targets"][tname] = {
+            "transfer_median_ape": med,
+            "hardware_distance": float(d_hw),
+            "conf_cross_median": float(np.median(conf_x)),
+            "strictly_lower_confidence": strict,
+        }
+        _emit(f"transfer_engine_{tname}", us_pred,
+              f"medAPE={med:.2f}%;d_hw={d_hw:.2f};"
+              f"conf_x={np.median(conf_x):.3f};strict={strict}")
+        # CI gates: transfer must stay accurate (the analytic scaler
+        # absorbs the roofline shift; residual is GBT fit error + noise)
+        # and must never report >= the same-hardware confidence
+        assert med < 20.0, f"{tname}: transfer medAPE {med:.1f}% >= 20%"
+        assert strict, f"{tname}: cross-hardware confidence not < same"
+
+    # --- (c) mixed TPU+GPU fleet: aware vs blind placement -----------------
+    # Both arms run the SAME slot-cycled TPU+L4 SimConfig; the aware
+    # controller overrides the slot hardware through Action.hardware
+    # (transfer-derated predictions pick the TPU), the blind controller
+    # emits hardware=None and inherits the mixed slot defaults.
+    src_setup = setup_of(source)
+    pool = (source, "gpu-l4")
+    ala = next(iter(reg.combos.values())).ala
+    hw_scale = {
+        n: (lambda ii, oo, bb, n=n: float(
+            throughput_batch(setup_of(n), [ii], [oo], [bb])[0]
+            / throughput_batch(src_setup, [ii], [oo], [bb])[0]))
+        for n in pool}
+    horizon = 16.0 if smoke else 40.0
+    shape = mix(("chat", 0.6), ("summarize", 0.2), ("generate", 0.2))
+    cap_req_s = throughput(src_setup, 512, 192, 64) / 192
+    tr = make_trace(TraceConfig(arrival="poisson", rate=2.0 * cap_req_s,
+                                horizon_s=horizon, shape_mix=shape,
+                                seed=29))
+    sim_cfg = SimConfig(setup=src_setup, batch_cap=64, n_replicas=1,
+                        max_replicas=6,
+                        replica_setups=(src_setup, setup_of("gpu-l4")))
+
+    def policy(kind: str) -> ALAAutoscaler:
+        if kind == "blind":
+            return ALAAutoscaler(ala=ala, max_replicas=6)
+        return ALAAutoscaler(ala=ala, max_replicas=6, hardware_pool=pool,
+                             fitted_hardware=source,
+                             hardware_scale=hw_scale, placement="aware")
+
+    fleet_out = {"pool": list(pool), "n_requests": len(tr), "arms": {}}
+    for arm in ("aware", "blind"):
+        per_engine = {}
+        for engine in ("heap", "fleet"):
+            res, us = _timed(simulate, tr, sim_cfg, policy(arm),
+                             engine=engine)
+            res.check_conservation()
+            per_engine[engine] = {
+                "slo_attainment": res.slo_attainment(ttft_slo_s),
+                "goodput_tok_s": res.goodput_tok_s,
+                "replica_seconds": res.replica_seconds,
+                "n_shed": len(res.shed),
+                "hardware": {h: sum(1 for v in res.replica_hw.values()
+                                    if v == h)
+                             for h in sorted(set(res.replica_hw.values()))},
+                "wall_s": us / 1e6,
+            }
+        per_engine["parity_slo_diff"] = abs(
+            per_engine["heap"]["slo_attainment"]
+            - per_engine["fleet"]["slo_attainment"])
+        fleet_out["arms"][arm] = per_engine
+    aware = fleet_out["arms"]["aware"]["heap"]
+    blind = fleet_out["arms"]["blind"]["heap"]
+    fleet_out["aware_beats_blind"] = bool(
+        aware["slo_attainment"] > blind["slo_attainment"]
+        or (aware["slo_attainment"] >= blind["slo_attainment"]
+            and aware["replica_seconds"] < blind["replica_seconds"]))
+    report["fleet"] = fleet_out
+    _emit("transfer_engine_fleet", us_fit,
+          f"slo_aware={aware['slo_attainment']:.3f};"
+          f"slo_blind={blind['slo_attainment']:.3f};"
+          f"aware_wins={fleet_out['aware_beats_blind']}")
+    # CI gates: placement must pay off, and the two engines must agree
+    # on the heterogeneous scenario within the documented tolerance
+    assert fleet_out["aware_beats_blind"], \
+        "hardware-aware placement did not beat hardware-blind"
+    for arm in ("aware", "blind"):
+        d = fleet_out["arms"][arm]["parity_slo_diff"]
+        assert d <= 0.1, f"{arm}: heap/fleet SLO parity diff {d:.3f} > 0.1"
+
+    key = "transfer_engine_smoke" if smoke else "transfer_engine"
+    REPORT[key] = report
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"BENCH_transfer{'_smoke' if smoke else ''}.json"
+     ).write_text(json.dumps(report, indent=1))
+    return report
+
+
 def wallclock_engine(arch: str = "qwen3-0.6b"):
     """Real JAX-engine sweep through bench.harness — the CLI grid/reps
     overrides and the module defaults share one code path."""
@@ -1149,6 +1340,7 @@ BENCHMARKS.update({
     "fleet_engine": fleet_engine,
     "online_engine": online_engine,
     "fault_engine": fault_engine,
+    "transfer_engine": transfer_engine,
     "wallclock_engine": wallclock_engine,
 })
 

@@ -82,9 +82,14 @@ PYTHONPATH=src python -m benchmarks.run                    # §Paper-validation
 PYTHONPATH=src python -m repro.analysis.experiments_doc    # this file
 ```
 
-Hardware model (target): TPU v5e — 197 TFLOP/s bf16/chip, 819 GB/s HBM,
-~50 GB/s/link ICI. This container is CPU-only: model quality numbers are
-real CPU executions; roofline terms derive from compiled-HLO costs.
+Hardware model: the cost functions are pure in a `HardwareProfile`
+descriptor (`repro.perfmodel.hardware`; see `docs/hardware_model.md`).
+The fitted baseline is TPU v5e — 197 TFLOP/s bf16/chip, 819 GB/s HBM,
+~50 GB/s/link ICI — with registered GPU/NPU descriptors (TPU v4, A100,
+H100, MI300X, L4, legacy-gpu) reached by cross-hardware transfer
+(`benchmarks/run.py transfer_engine`). This container is CPU-only:
+model quality numbers are real CPU executions; roofline terms derive
+from compiled-HLO costs.
 """
 
 DATASETS = """## §Datasets

@@ -25,7 +25,8 @@ import numpy as np
 from repro.configs import ARCHS, get_config
 from repro.core.dataset import Dataset
 from repro.perfmodel.simulator import ServingSetup, sample_throughput
-from repro.perfmodel.tpu import LEGACY_GPU, PROFILES, TPU_V5E
+from repro.perfmodel.hardware import (LEGACY_GPU, PROFILES, TPU_V5E,
+                                      feature_row)
 
 DATA_DIR = pathlib.Path(__file__).resolve().parents[3] / "results" / "data"
 
@@ -54,6 +55,10 @@ def _simulate(model_name: str, hw, grid, reps: int, rng,
     cfg = get_config(model_name)
     setup = ServingSetup(cfg=cfg, hw=hw, chips=chips or _tp_degree(cfg),
                          framework_eff=FRAMEWORKS[framework])
+    # hardware identity (acc) *and* descriptor features: rows from
+    # different accelerators key apart in the registry yet stay
+    # regressable across hardware via the hw_* columns
+    hw_cols = feature_row(hw)
     rows = []
     for ii, oo, bb in grid:
         for t in sample_throughput(setup, ii, oo, bb, reps, rng,
@@ -61,7 +66,8 @@ def _simulate(model_name: str, hw, grid, reps: int, rng,
             rows.append(dict(model=model_name, acc=hw.name,
                              acc_count=setup.chips, back=framework,
                              prec="bf16", mode="serve",
-                             ii=ii, oo=oo, bb=bb, thpt=float(t)))
+                             ii=ii, oo=oo, bb=bb, thpt=float(t),
+                             **hw_cols))
     return rows
 
 

@@ -226,17 +226,19 @@ class ALA:
                 "oo": frozenset(np.unique(q[1]).tolist()),
                 "bb": frozenset(np.unique(q[2]).tolist())}
 
-    def estimate(self, new) -> Tuple[float, float]:
+    def estimate(self, new, hw_dist: float = 0.0) -> Tuple[float, float]:
         """(predicted error %, confidence) for a new workload dataset.
 
         ``new`` is an (ii, oo, bb, thpt) tuple (thpt may be NaNs when
         unknown).  Runs the batch-of-one serial reference path; the
         batched JAX engine (``estimate_batch``) matches it to <= 1e-6.
         """
-        err, _, conf = self.estimate_batch([new], backend="numpy")
+        err, _, conf = self.estimate_batch([new], backend="numpy",
+                                           hw_dist=hw_dist)
         return float(err[0]), float(conf[0])
 
-    def estimate_batch(self, queries: Sequence, backend: str = "jax"
+    def estimate_batch(self, queries: Sequence, backend: str = "jax",
+                       hw_dist=0.0
                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Batched Alg 7+8: (err, d_min, confidence) vectors, one entry
         per query workload.
@@ -246,7 +248,14 @@ class ALA:
         through two jitted calls — encoded signatures through the
         ``PackedForest`` traversal and the fleet distance kernel over
         the ``SubsetBank``; ``backend="numpy"`` is the serial reference.
-        Degenerate logs yield the (inf, 0.0) sentinel per query."""
+        Degenerate logs yield the (inf, 0.0) sentinel per query.
+
+        ``hw_dist`` (scalar or per-query vector) is the descriptor
+        distance of the hardware each query runs on from the hardware
+        this fit was benchmarked on
+        (``repro.perfmodel.hardware.hardware_distance``); it lowers the
+        reported confidence for cross-hardware transfer while ``d_min``
+        stays the pure workload distance."""
         assert self.error_model is not None and self.sa_log is not None
         t0 = time.perf_counter()
         queries = [tuple(np.atleast_1d(np.asarray(v, np.float64))
@@ -255,6 +264,7 @@ class ALA:
         err = predict_error(self.error_model, sigs, self.sa_log.universes,
                             backend=backend) if sigs else np.zeros(0)
         filled = [self._fill_thpt(q) for q in queries]
-        d_min, conf = bank_confidence(self.bank(), filled, backend=backend)
+        d_min, conf = bank_confidence(self.bank(), filled, backend=backend,
+                                      hw_dist=hw_dist)
         self.timings["estimate_batch_s"] = time.perf_counter() - t0
         return np.asarray(err, np.float64), d_min, conf

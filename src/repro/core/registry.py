@@ -166,8 +166,18 @@ class ModelRegistry:
                 np.ones(len(data), bool)
             yield combo, cm, mask
 
-    def predict(self, data: Dataset) -> np.ndarray:
-        """Throughput prediction for every row (Alg 5 per combination)."""
+    def predict(self, data: Dataset, transfer: bool = False,
+                scale_fn=None) -> np.ndarray:
+        """Throughput prediction for every row (Alg 5 per combination).
+
+        ``transfer=True`` extends coverage to rows of *unfitted* hardware
+        (paper RQ4): a row whose combination differs from a fitted one
+        only in the hardware key borrows that donor's predictor.
+        ``scale_fn(query_combo, donor_combo, ii, oo, bb)`` optionally
+        rescales the donor prediction — the analytic roofline ratio from
+        ``repro.perfmodel.simulator.throughput_batch`` is the intended
+        scaler (hardware-agnostic analytical transfer); without it the
+        donor prediction is served raw."""
         out = np.zeros(len(data), np.float64)
         ii, oo, bb, _ = data.workload
         for combo, cm, mask in self._combo_masks(data):
@@ -175,7 +185,62 @@ class ModelRegistry:
                 continue
             out[mask] = predict_throughput(cm.db, cm.predictor,
                                            ii[mask], oo[mask], bb[mask])
+        if transfer:
+            for combo, donor, mask in self._transfer_groups(data):
+                cm = self.combos[donor]
+                pred = predict_throughput(cm.db, cm.predictor,
+                                          ii[mask], oo[mask], bb[mask])
+                if scale_fn is not None:
+                    pred = pred * scale_fn(combo, donor,
+                                           ii[mask], oo[mask], bb[mask])
+                out[mask] = pred
         return out
+
+    # -- cross-hardware transfer (paper RQ4) ---------------------------------
+    def _hw_key_index(self, key: str = "acc") -> Optional[int]:
+        keys = getattr(self, "_active_keys", ())
+        return keys.index(key) if key in keys else None
+
+    def donor_for(self, combo: Tuple, need_ala: bool = False,
+                  hw_key: str = "acc") -> Optional[Tuple]:
+        """The fitted combination this (unfitted) one can borrow from: a
+        combination matching on every key column *except* the hardware
+        key, nearest by descriptor distance when several qualify.
+        Returns None when the registry has no hardware key column or no
+        candidate."""
+        hi = self._hw_key_index(hw_key)
+        if hi is None:
+            return None
+        combo = tuple(str(v) for v in combo)
+        rest = combo[:hi] + combo[hi + 1:]
+        best, best_d = None, np.inf
+        for cand, cm in self.combos.items():
+            if cand[:hi] + cand[hi + 1:] != rest or cand[hi] == combo[hi]:
+                continue
+            if need_ala and getattr(cm, "ala", None) is None:
+                continue
+            d = _hardware_distance(combo[hi], cand[hi])
+            if d < best_d:
+                best, best_d = cand, d
+        return best
+
+    def _transfer_groups(self, data: Dataset, need_ala: bool = False):
+        """(query_combo, donor_combo, row_mask) for every combination in
+        ``data`` that is not fitted (or lacks an uncertainty fit, with
+        ``need_ala``) but has a transfer donor."""
+        keys = getattr(self, "_active_keys", ())
+        if not keys:
+            return
+        arr = np.stack([data[k].astype(str) for k in keys], axis=1)
+        for combo in sorted(map(tuple, np.unique(arr, axis=0))):
+            cm = self.combos.get(combo)
+            if cm is not None and not (need_ala
+                                       and getattr(cm, "ala", None) is None):
+                continue
+            donor = self.donor_for(combo, need_ala=need_ala)
+            if donor is None:
+                continue
+            yield combo, donor, np.all(arr == np.asarray(combo), axis=1)
 
     # -- Alg 6+7 per combination, Alg 8 over whole datasets ------------------
     def fit_uncertainty(self, data: Dataset, test_frac: float = 0.3,
@@ -213,7 +278,8 @@ class ModelRegistry:
             self.combos[combo] = dataclasses.replace(cm, ala=ala)
         return self
 
-    def estimate(self, data: Dataset, backend: str = "jax"
+    def estimate(self, data: Dataset, backend: str = "jax",
+                 transfer: bool = False
                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Batched Alg 8 for every row: (err, d_min, confidence) arrays
         aligned to ``data``.
@@ -223,6 +289,13 @@ class ModelRegistry:
         ``ALA.estimate_batch``.  Rows of unknown combinations — or of
         combinations without an uncertainty fit — get the explicit
         degenerate sentinel (nan, inf, 0.0).
+
+        ``transfer=True``: rows of unfitted hardware are answered by
+        their transfer donor (``donor_for``) with the hardware-descriptor
+        distance folded into the confidence — strictly below what the
+        donor reports for the same workload on its own hardware, and
+        the (inf, 0.0) sentinel when the hardware is unknown to
+        ``repro.perfmodel.hardware.PROFILES``.
         """
         n = len(data)
         err = np.full(n, np.nan)
@@ -235,4 +308,26 @@ class ModelRegistry:
             q = (ii[mask], oo[mask], bb[mask], thpt[mask])
             e, d, c = cm.ala.estimate_batch([q], backend=backend)
             err[mask], d_min[mask], conf[mask] = e[0], d[0], c[0]
+        if transfer:
+            hi = self._hw_key_index()
+            for combo, donor, mask in self._transfer_groups(data,
+                                                            need_ala=True):
+                hw_d = _hardware_distance(combo[hi], donor[hi])
+                if not np.isfinite(hw_d):
+                    continue        # unknown hardware keeps the sentinel
+                q = (ii[mask], oo[mask], bb[mask], thpt[mask])
+                ala = self.combos[donor].ala
+                e, d, c = ala.estimate_batch([q], backend=backend,
+                                             hw_dist=hw_d)
+                err[mask], d_min[mask], conf[mask] = e[0], d[0], c[0]
         return err, d_min, conf
+
+
+def _hardware_distance(a: str, b: str) -> float:
+    """Descriptor distance between two hardware names; inf when either
+    is not a registered profile (transfer to unknown hardware must read
+    as zero-confidence, never as a silent same-hardware answer)."""
+    from repro.perfmodel.hardware import PROFILES, hardware_distance
+    if a not in PROFILES or b not in PROFILES:
+        return float("inf")
+    return hardware_distance(a, b)

@@ -43,6 +43,12 @@ MIN_SUBSET_ROWS = 2
 # both engines reduce d_min over the same trailing window of the SA log
 # by default, and it bounds bank memory on long multi-chain runs
 DEFAULT_MAX_SUBSETS = 200
+# weight of the hardware-descriptor distance when a fit is queried on
+# hardware it was not benchmarked on: the effective Alg 8 distance is
+# d_eff = d_min + HW_DIST_WEIGHT * d_hw before the 1/(1+d) squash, so
+# any d_hw > 0 strictly lowers confidence on identical workloads (see
+# repro.perfmodel.hardware.hardware_distance for the d_hw scale)
+HW_DIST_WEIGHT = 1.0
 
 
 def _feature_bins(ref: Dict[str, np.ndarray],
@@ -87,8 +93,8 @@ def workload_distance(ref_rows: Dict[str, np.ndarray],
 
 
 def confidence(train, log: SALog, new,
-               max_subsets: int = DEFAULT_MAX_SUBSETS
-               ) -> Tuple[float, float]:
+               max_subsets: int = DEFAULT_MAX_SUBSETS,
+               hw_dist: float = 0.0) -> Tuple[float, float]:
     """Alg 8 lines 4-6: (d_min, confidence) for a new workload.
 
     ``train``/``new`` are (ii, oo, bb, thpt) tuples; logged subsets are
@@ -110,12 +116,17 @@ def confidence(train, log: SALog, new,
         ref_rows = {"ii": ii[m], "oo": oo[m], "bb": bb[m], "thpt": thpt[m]}
         d = workload_distance(ref_rows, new_rows)
         d_min = min(d_min, d)
-    return float(d_min), confidence_from_dmin(d_min)
+    return float(d_min), confidence_from_dmin(d_min, hw_dist)
 
 
-def confidence_from_dmin(d_min: float) -> float:
-    """1 / (1 + d_min), with the degenerate d_min = inf mapping to 0.0."""
-    return float(1.0 / (1.0 + d_min)) if np.isfinite(d_min) else 0.0
+def confidence_from_dmin(d_min: float, hw_dist: float = 0.0) -> float:
+    """1 / (1 + d_min + HW_DIST_WEIGHT * hw_dist), with the degenerate
+    d_min = inf mapping to 0.0.  ``hw_dist`` is the hardware-descriptor
+    distance between the queried hardware and the hardware the fit was
+    benchmarked on (0 for same-hardware queries)."""
+    if not np.isfinite(d_min):
+        return 0.0
+    return float(1.0 / (1.0 + d_min + HW_DIST_WEIGHT * hw_dist))
 
 
 # ---------------------------------------------------------------------------
@@ -427,15 +438,20 @@ def bank_distances(bank: SubsetBank, queries: Sequence,
 
 
 def bank_confidence(bank: SubsetBank, queries: Sequence,
-                    backend: str = "jax"
+                    backend: str = "jax", hw_dist=0.0
                     ) -> Tuple[np.ndarray, np.ndarray]:
     """(d_min, confidence) vectors over queries; degenerate banks (no
-    valid subset) yield the explicit (inf, 0.0) sentinel per query."""
+    valid subset) yield the explicit (inf, 0.0) sentinel per query.
+
+    ``hw_dist`` (scalar or per-query vector) is the hardware-descriptor
+    distance of the queried hardware from the benchmarked hardware; the
+    reported ``d_min`` stays the pure workload distance while the
+    confidence squashes ``d_min + HW_DIST_WEIGHT * hw_dist``."""
     D = bank_distances(bank, queries, backend=backend)
-    return dmin_confidence(D, bank.valid)
+    return dmin_confidence(D, bank.valid, hw_dist=hw_dist)
 
 
-def dmin_confidence(D: np.ndarray, valid: np.ndarray
+def dmin_confidence(D: np.ndarray, valid: np.ndarray, hw_dist=0.0
                     ) -> Tuple[np.ndarray, np.ndarray]:
     """Reduce a (Q, S) distance matrix over the valid subsets."""
     Q = D.shape[0]
@@ -444,5 +460,6 @@ def dmin_confidence(D: np.ndarray, valid: np.ndarray
         d_min = np.full(Q, np.inf)
     else:
         d_min = Dv.min(axis=1)
-    conf = np.where(np.isfinite(d_min), 1.0 / (1.0 + d_min), 0.0)
+    d_eff = d_min + HW_DIST_WEIGHT * np.asarray(hw_dist, np.float64)
+    conf = np.where(np.isfinite(d_eff), 1.0 / (1.0 + d_eff), 0.0)
     return d_min, conf

@@ -24,7 +24,7 @@ import numpy as np
 
 from repro.models.config import (FFN_MOE, MIXER_ATTN, MIXER_MAMBA,
                                  MIXER_MLSTM, MIXER_SLSTM, ModelConfig)
-from repro.perfmodel.tpu import HardwareProfile
+from repro.perfmodel.hardware import HardwareProfile
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,7 +118,8 @@ def decode_step_time_group(setup: ServingSetup, contexts) -> float:
     # compute: 2 FLOPs/param/token + attention dot products over context
     flops = 2 * n_active * bb
     flops += 2 * 2 * attn * cfg.n_heads * cfg.d_head * ctx_sum
-    t_compute = flops / (chips * hw.peak_flops * hw.mfu_prefill)
+    t_compute = flops / (chips * hw.flops_at(setup.dtype_bytes)
+                         * hw.mfu_prefill)
     # memory: weights touched once + KV/state per sequence
     mem = weights_read_bytes(cfg, bb, setup.dtype_bytes)
     mem += ctx_sum * kv_bytes_per_token(cfg, setup.dtype_bytes)
@@ -160,7 +161,8 @@ def decode_time_fn(setup: ServingSetup, xp=np):
     n_active = float(cfg.param_count(active_only=True))
     kv_tok = float(kv_bytes_per_token(cfg, setup.dtype_bytes))
     st = float(state_bytes(cfg, setup.dtype_bytes))
-    c_flops = 1.0 / (chips * hw.peak_flops * hw.mfu_prefill)
+    c_flops = 1.0 / (chips * hw.flops_at(setup.dtype_bytes)
+                     * hw.mfu_prefill)
     c_mem = 1.0 / (chips * hw.hbm_bw * hw.mfu_decode)
     attn_flops = float(2 * 2 * attn * cfg.n_heads * cfg.d_head)
     coll_per_bb = (2 * cfg.n_layers * cfg.d_model * setup.dtype_bytes
@@ -221,7 +223,8 @@ def prefill_step_time(setup: ServingSetup, prompt_lens) -> float:
     n_active = cfg.param_count(active_only=True)
     flops = 2 * n_active * tok_sum
     flops += 2 * 2 * attn * cfg.n_heads * cfg.d_head * sq_sum / 2
-    t_compute = flops / (chips * hw.peak_flops * hw.mfu_prefill)
+    t_compute = flops / (chips * hw.flops_at(setup.dtype_bytes)
+                         * hw.mfu_prefill)
     mem = (weights_read_bytes(cfg, 1e9, setup.dtype_bytes)
            + tok_sum * kv_bytes_per_token(cfg, setup.dtype_bytes))
     t_mem = mem / (chips * hw.hbm_bw * hw.mfu_decode)
@@ -246,7 +249,8 @@ def prefill_time_fn(setup: ServingSetup):
     n_active = cfg.param_count(active_only=True)
     kv_tok = kv_bytes_per_token(cfg, setup.dtype_bytes)
     wread = weights_read_bytes(cfg, 1e9, setup.dtype_bytes)
-    c_flops = 1.0 / (chips * hw.peak_flops * hw.mfu_prefill)
+    c_flops = 1.0 / (chips * hw.flops_at(setup.dtype_bytes)
+                     * hw.mfu_prefill)
     c_mem = 1.0 / (chips * hw.hbm_bw * hw.mfu_decode)
     attn_flops = 2 * 2 * attn * cfg.n_heads * cfg.d_head
     eff = setup.framework_eff
@@ -279,6 +283,26 @@ def throughput(setup: ServingSetup, ii: float, oo: float, bb: float) -> float:
     t_dec = decode_step_time(setup, bb, ctx)
     total = t_pre + oo * t_dec
     return bb * oo / total
+
+
+def throughput_batch(setup: ServingSetup, ii, oo, bb) -> np.ndarray:
+    """Vectorized ``throughput`` over row arrays (built on the
+    ``*_time_fn`` closures, so it is a pure function of the hardware
+    descriptor like everything else here).
+
+    The analytic cross-hardware transfer scaler (paper RQ4 / the
+    AMD-style hardware-agnostic model) is the ratio
+    ``throughput_batch(setup_to, ...) / throughput_batch(setup_from, ...)``
+    applied to a fit benchmarked on ``setup_from``'s hardware."""
+    ii = np.asarray(ii, np.float64)
+    oo = np.asarray(oo, np.float64)
+    bb = np.asarray(bb, np.float64)
+    dec = decode_time_fn(setup)
+    pre = prefill_time_fn(setup)
+    t_pre = pre(ii * bb, ii * ii * bb)
+    ctx = ii + oo / 2.0
+    t_dec = dec(bb, ctx * bb)
+    return bb * oo / (t_pre + oo * t_dec)
 
 
 def sample_throughput(setup: ServingSetup, ii, oo, bb, reps: int,

@@ -1,36 +1,20 @@
-"""Accelerator profiles for the analytical serving-performance simulator.
+"""Deprecated alias for ``repro.perfmodel.hardware``.
 
-TPU v5e numbers match the roofline constants used in EXPERIMENTS.md
-(197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI).  The ``legacy-gpu``
-profile stands in for the paper's RQ4 hardware-mismatch case (Qwen2-7B on
-Intel PVC vs the H100-trained predictor): different compute/bandwidth
-ratio => different saturation curve shape.
+The accelerator descriptors outgrew this module's name the moment they
+stopped being TPU-only; the subsystem now lives in
+``repro.perfmodel.hardware`` (descriptor dataclass, registered GPU/NPU
+profiles, cross-hardware distance).  This shim re-exports the public
+names for back-compat and will be removed; in-repo code must import
+``repro.perfmodel.hardware`` (enforced by a grep-check test).
 """
 from __future__ import annotations
 
-import dataclasses
+import warnings
 
+from repro.perfmodel.hardware import (  # noqa: F401
+    A100_80G, H100_SXM, L4, LEGACY_GPU, MI300X, PROFILES, TPU_V4, TPU_V5E,
+    HardwareProfile, hardware_distance, profile)
 
-@dataclasses.dataclass(frozen=True)
-class HardwareProfile:
-    name: str
-    peak_flops: float          # bf16 FLOP/s per chip
-    hbm_bw: float              # bytes/s per chip
-    ici_bw: float              # bytes/s per link
-    hbm_bytes: float           # capacity per chip
-    # achievable fractions (matmul-efficiency asymptotes)
-    mfu_prefill: float = 0.55
-    mfu_decode: float = 0.70   # of the *bandwidth* roofline
-    ici_eff: float = 0.80
-
-
-TPU_V5E = HardwareProfile(
-    name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9,
-    hbm_bytes=16e9)
-
-# stand-in for an accelerator with a very different compute:bandwidth ratio
-LEGACY_GPU = HardwareProfile(
-    name="legacy-gpu", peak_flops=105e12, hbm_bw=1600e9, ici_bw=25e9,
-    hbm_bytes=48e9, mfu_prefill=0.42, mfu_decode=0.55, ici_eff=0.6)
-
-PROFILES = {p.name: p for p in (TPU_V5E, LEGACY_GPU)}
+warnings.warn(
+    "repro.perfmodel.tpu is deprecated; import repro.perfmodel.hardware",
+    DeprecationWarning, stacklevel=2)

@@ -183,10 +183,16 @@ def windows_to_rows(windows: List[WindowSummary], setup: ServingSetup,
                     model: str, back: str = TRACE_BACKEND,
                     prec: str = "bf16", mode: str = "serve"
                     ) -> List[Dict]:
+    """One benchmark row per window, keyed and *featurized* by hardware:
+    besides the ``acc`` identity column the row carries the
+    ``hw_*`` descriptor features (log10 delivered rooflines) so a
+    hardware-conditioned model can regress across accelerators."""
+    from repro.perfmodel.hardware import feature_row
+    hw_cols = feature_row(setup.hw)
     return [dict(model=model, acc=setup.hw.name, acc_count=setup.chips,
                  back=back, prec=prec, mode=mode,
                  ii=w.ii, oo=w.oo, bb=max(int(round(w.bb)), 1),
-                 thpt=float(w.thpt))
+                 thpt=float(w.thpt), **hw_cols)
             for w in windows]
 
 
@@ -206,7 +212,24 @@ def windows_to_dataset(result: SimResult, setup: ServingSetup, model: str,
     empty dataset into a fit.  Non-finite window rows (a degenerate or
     fault-corrupted measurement) are dropped with a warning reporting
     the count (``on_nonfinite="drop"``) or raise
-    (``on_nonfinite="raise"``); they never reach the fit silently."""
+    (``on_nonfinite="raise"``); they never reach the fit silently.
+
+    Heterogeneous fleets are *rejected*: a run whose replicas span more
+    than one hardware profile cannot be summarized under one ``acc``
+    key — windows mix steps served at different rooflines, and stamping
+    them all with ``setup``'s hardware would silently corrupt the
+    database.  Use ``windows_to_datasets_by_hardware`` instead.  A
+    single-hardware run whose hardware disagrees with ``setup.hw`` is
+    rejected for the same reason."""
+    hw_names = set(getattr(result, "replica_hw", {}).values())
+    if len(hw_names) > 1:
+        raise ValueError(
+            f"heterogeneous fleet ({sorted(hw_names)}): rows cannot share "
+            f"one 'acc' key; use windows_to_datasets_by_hardware")
+    if hw_names and setup.hw.name not in hw_names:
+        raise ValueError(
+            f"result ran on {sorted(hw_names)[0]!r} but setup names "
+            f"{setup.hw.name!r}; rows would be keyed to the wrong hardware")
     rows = windows_to_rows(
         summarize_windows(result, window_s, min_completions),
         setup, model, back=back)
@@ -222,3 +245,66 @@ def windows_to_dataset(result: SimResult, setup: ServingSetup, model: str,
         raise ValueError("no steady-state windows in this run; "
                          "lengthen the trace or shrink window_s")
     return Dataset.from_rows(rows)
+
+
+class _HardwareView:
+    """A per-hardware slice of a SimResult: only the steps / requests
+    served by the given replica ids.  Quacks just enough like a
+    ``SimResult`` (or ``FleetSimResult``) for ``summarize_windows``."""
+
+    def __init__(self, result: SimResult, rids: List[int]):
+        self.sim_end_s = result.sim_end_s
+        self.replica_hw = {r: h for r, h in result.replica_hw.items()
+                           if r in rids}
+        rid_set = set(rids)
+        sa = getattr(result, "step_arrays", None)
+        if sa is not None and getattr(result, "req", None) is not None:
+            sm = np.isin(sa["replica"], list(rid_set))
+            self.step_arrays = {k: v[sm] for k, v in sa.items()}
+            qm = np.isin(result.req["replica"], list(rid_set))
+            self.req = {k: v[qm] for k, v in result.req.items()}
+        else:
+            self.step_arrays = None
+            self.req = None
+            self.steps = [s for s in result.steps if s.replica in rid_set]
+            self.completed = [r for r in result.completed
+                              if r.replica in rid_set]
+
+
+def windows_to_datasets_by_hardware(
+        result: SimResult, setups: Dict[str, ServingSetup], model: str,
+        window_s: float = 5.0, min_completions: int = 2,
+        back: str = TRACE_BACKEND, on_nonfinite: str = "drop"
+        ) -> Dict[str, Dataset]:
+    """Heterogeneous-fleet run -> one dataset per hardware profile.
+
+    ``setups`` maps each hardware name in ``result.replica_hw`` to the
+    ServingSetup its replicas ran (``SimConfig.setup_for`` resolves
+    them).  Steps and completions are attributed to hardware through
+    their replica id, so every row is keyed — and featurized — by the
+    accelerator that actually served it.  Hardware whose windows never
+    reach steady state is skipped with a warning (a lightly loaded tier
+    is data-starved, not an error)."""
+    groups: Dict[str, List[int]] = {}
+    for rid, hw in sorted(result.replica_hw.items()):
+        groups.setdefault(hw, []).append(rid)
+    if not groups:
+        raise ValueError("result carries no replica_hw attribution")
+    out: Dict[str, Dataset] = {}
+    for hw, rids in sorted(groups.items()):
+        if hw not in setups:
+            raise KeyError(f"no ServingSetup supplied for hardware {hw!r}")
+        view = _HardwareView(result, rids)
+        try:
+            out[hw] = windows_to_dataset(
+                view, setups[hw], model, window_s=window_s,
+                min_completions=min_completions, back=back,
+                on_nonfinite=on_nonfinite)
+        except ValueError as e:
+            if "steady-state" not in str(e):
+                raise
+            warnings.warn(f"hardware {hw!r}: {e}; skipped",
+                          RuntimeWarning, stacklevel=2)
+    if not out:
+        raise ValueError("no hardware tier produced steady-state windows")
+    return out

@@ -40,6 +40,19 @@ replicas are excluded from ``Observation.n_active_replicas`` by the
 simulator, so the absolute target it returns is a healthy-replica
 target and the fleet provisions replacements for the dead.
 
+Heterogeneous placement: give the controller a ``hardware_pool`` of
+profile names and it additionally decides *which hardware* scale-up
+replicas should run on.  Each candidate's throughput is the fitted
+prediction times an optional analytic ``hardware_scale`` ratio (the
+roofline transfer scaler of ``repro.core.registry``), and its
+confidence is the Alg 8 region confidence *re-squashed with the
+hardware-descriptor distance* from the fitted hardware
+(``repro.core.uncertainty.confidence_from_dmin``) — so a faraway
+accelerator must promise proportionally more derated throughput to win
+the placement.  The winner rides out on ``Action.hardware``;
+``placement="roundrobin"`` is the hardware-blind baseline that cycles
+the pool without consulting predictions.
+
 ``StaticPolicy`` is the static-bb baseline the benchmark compares
 against: fixed replica count, fixed admission cap, no feedback.
 """
@@ -99,6 +112,21 @@ class ALAAutoscaler:
     # (t, kind) per degradation action: "backoff" | "hold_down" |
     # "zero_window"
     degradations: list = dataclasses.field(default_factory=list)
+    # heterogeneous placement: candidate hardware (profile names) for
+    # replicas this controller *creates*.  Empty -> hardware-agnostic
+    # (Action.hardware stays None, slot defaults apply).
+    hardware_pool: Tuple[str, ...] = ()
+    # hardware the ALA database was fitted on; cross-hardware candidates
+    # are derated by descriptor distance from it.  None -> distance 0.
+    fitted_hardware: Optional[str] = None
+    # optional analytic scalers: profile name -> f(ii, oo, bb) ->
+    # throughput multiplier vs the fitted hardware (see
+    # repro.core.registry roofline transfer)
+    hardware_scale: Optional[dict] = None
+    placement: str = "aware"          # "aware" | "roundrobin" (blind)
+    # (t, hardware, derated score) per placement decision
+    placements: list = dataclasses.field(default_factory=list)
+    _rr_idx: int = dataclasses.field(default=0, repr=False)
     _resid: collections.deque = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=64), repr=False)
     _generation: int = dataclasses.field(default=0, repr=False)
@@ -173,6 +201,52 @@ class ALAAutoscaler:
         i = int(np.argmax(thpt))
         return int(bbs[i]), float(thpt[i]), float(conf)
 
+    def _choose_hardware(self, obs: Observation, bb: int, pred: float,
+                         conf: float) -> Tuple[str, float, float]:
+        """Pick the hardware for scale-up replicas.
+
+        Returns ``(profile name, predicted tok/s on it, transferred
+        confidence)``.  The score is the transfer-scaled prediction
+        derated by the *cross-hardware* confidence: the fitted-hardware
+        region distance re-squashed with the descriptor distance
+        (identical hardware keeps ``conf`` exactly)."""
+        pool = self.hardware_pool
+        if self.placement == "roundrobin":
+            # hardware-blind baseline: cycle the pool, never consult
+            # predictions or descriptor distances
+            name = pool[self._rr_idx % len(pool)]
+            self._rr_idx += 1
+            self.placements.append((obs.now, name, float("nan")))
+            return name, pred, conf
+        from repro.core.uncertainty import confidence_from_dmin
+        from repro.perfmodel.hardware import PROFILES, hardware_distance
+        # invert the Alg 8 squash to recover the region's workload
+        # distance, then re-squash per candidate with its hw distance
+        d_min = (1.0 / conf - 1.0) if np.isfinite(conf) and conf > 0.0 \
+            else float("inf")
+        best = None
+        for name in pool:
+            if self.fitted_hardware is None or name == self.fitted_hardware:
+                d_hw = 0.0
+            elif self.fitted_hardware in PROFILES and name in PROFILES:
+                d_hw = hardware_distance(PROFILES[self.fitted_hardware],
+                                         PROFILES[name])
+            else:
+                d_hw = float("inf")   # unknown descriptor: no trust
+            conf_hw = confidence_from_dmin(d_min, hw_dist=d_hw)
+            scale = 1.0
+            if self.hardware_scale and name in self.hardware_scale:
+                scale = float(self.hardware_scale[name](
+                    obs.mean_ii, obs.mean_oo, float(bb)))
+            pred_hw = pred * scale
+            score = pred_hw * derate_confidence(
+                conf_hw, self.confidence_floor, self.min_derate)
+            if best is None or score > best[0]:
+                best = (score, name, pred_hw, conf_hw)
+        score, name, pred_hw, conf_hw = best
+        self.placements.append((obs.now, name, float(score)))
+        return name, pred_hw, conf_hw
+
     def control(self, obs: Observation) -> Action:
         self._refresh_online()
         if obs.window_s < self.min_window_s:
@@ -188,6 +262,15 @@ class ALAAutoscaler:
                           batch_cap=obs.batch_cap)
         bb, pred, conf = self._predict_per_replica(obs.mean_ii, obs.mean_oo)
         self._note_drift(obs, conf)
+        hw_choice = None
+        if self.hardware_pool:
+            hw_choice, pred_hw, conf_hw = self._choose_hardware(
+                obs, bb, pred, conf)
+            if self.placement == "aware" and np.isfinite(pred_hw) \
+                    and pred_hw > 0.0:
+                # size the fleet against the hardware we will actually
+                # provision, at its transferred confidence
+                pred, conf = pred_hw, conf_hw
         # --- backoff bookkeeping: sustained unreliable ticks arm an
         # exponential hold during which the model is not consulted ------
         unreliable = (not np.isfinite(pred)) or pred <= 0.0 \
@@ -244,4 +327,4 @@ class ALAAutoscaler:
                 n = cur
         else:
             self._down_streak = 0
-        return Action(n_replicas=n, batch_cap=bb)
+        return Action(n_replicas=n, batch_cap=bb, hardware=hw_choice)

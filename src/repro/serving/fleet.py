@@ -96,14 +96,21 @@ class _VecReplica:
                  "waiting", "run_rem", "run_ctx", "run_gdx", "kv_reserved",
                  "pend_end", "pend_kind", "pend_admit", "pend_dur",
                  "pend_bb", "draining", "active", "provisioning", "failed",
-                 "restore_to_active", "load", "k_hint")
+                 "restore_to_active", "load", "k_hint",
+                 "prefill_f", "traj", "hw_name")
 
     def __init__(self, rid: int, batch_cap: int, max_prefill: int,
-                 kv_capacity: float, clock: float, active: bool = True):
+                 kv_capacity: float, clock: float, active: bool = True,
+                 prefill_f=None, traj=None, hw_name: str = ""):
         self.rid = rid
         self.batch_cap = batch_cap
         self.max_prefill = max_prefill
         self.kv_capacity = kv_capacity
+        # per-replica cost closures: heterogeneous fleets give each
+        # replica its own hardware's roofline
+        self.prefill_f = prefill_f
+        self.traj = traj
+        self.hw_name = hw_name
         self.clock = clock                # applied-state time
         self.waiting: Deque[int] = collections.deque()   # global req idx
         self.run_rem = np.zeros(0, np.int64)   # tokens left per seq
@@ -282,18 +289,18 @@ class VectorFleetSimulator:
         self.trace = trace
         self.cfg = cfg
         self.policy = policy
-        self.kv_cap = (cfg.kv_capacity_override
-                       if cfg.kv_capacity_override is not None
-                       else kv_capacity_tokens(cfg.setup))
-        self.decode_f = decode_time_fn(cfg.setup)
-        self.prefill_f = prefill_time_fn(cfg.setup)
-        if cfg.traj_backend == "numpy":
-            self.traj = self.decode_f
-        elif cfg.traj_backend == "jax":
-            self.traj = _JaxTraj(cfg.setup)
-        else:
+        if cfg.traj_backend not in ("numpy", "jax"):
             raise KeyError(f"unknown traj_backend {cfg.traj_backend!r}; "
                            f"known: numpy, jax")
+        # per-setup cost-closure cache (ServingSetup is frozen/hashable):
+        # heterogeneous fleets mix hardware, each distinct setup compiles
+        # its closures once and every replica on it shares them
+        self._closure_cache: Dict[object, Tuple[float, object, object]] = {}
+        # admission bound mirrors the heap engine: shed only what the
+        # *largest* slot cannot hold; per-replica fit re-checked at route
+        self.kv_cap = max(self._closures(s)[0] for s in cfg.slot_setups())
+        self.decode_f = decode_time_fn(cfg.setup)
+        self.prefill_f = prefill_time_fn(cfg.setup)
         inj = cfg.faults
         self._sb: Dict[int, np.ndarray] = {}
         self._sf: Dict[int, np.ndarray] = {}
@@ -473,14 +480,29 @@ class VectorFleetSimulator:
             n_events=self.n_events, replica_seconds=active_s,
             controls=controls, t_start=cfg.t_start,
             availability=(active_s / denom if denom > 0 else 1.0),
-            fault_log=fault_log)
+            fault_log=fault_log,
+            replica_hw={r.rid: r.hw_name for r in replicas})
 
     # -- replica lifecycle --------------------------------------------------
-    def _new_replica(self, rid: int, clock: float,
-                     active: bool = True) -> _VecReplica:
+    def _closures(self, setup) -> Tuple[float, object, object]:
+        """(kv_capacity, prefill_time_fn, decode trajectory fn) for a
+        setup, cached so replicas sharing hardware share closures."""
+        got = self._closure_cache.get(setup)
+        if got is None:
+            traj = (_JaxTraj(setup) if self.cfg.traj_backend == "jax"
+                    else decode_time_fn(setup))
+            got = (self.cfg.kv_cap_for(setup), prefill_time_fn(setup), traj)
+            self._closure_cache[setup] = got
+        return got
+
+    def _new_replica(self, rid: int, clock: float, active: bool = True,
+                     hardware: Optional[str] = None) -> _VecReplica:
+        setup = self.cfg.setup_for(rid, hardware)
+        kv, pre, traj = self._closures(setup)
         return _VecReplica(rid, self.cfg.batch_cap,
-                           self.cfg.max_prefill_requests, self.kv_cap,
-                           clock, active=active)
+                           self.cfg.max_prefill_requests, kv,
+                           clock, active=active, prefill_f=pre, traj=traj,
+                           hw_name=setup.hw.name)
 
     def _set_state(self, r: _VecReplica, t: float,
                    active: Optional[bool] = None,
@@ -522,8 +544,26 @@ class VectorFleetSimulator:
                 or [r for r in replicas if not r.failed]
                 or replicas)
 
-    def _dispatch(self, g: int, t: float, cands: List[_VecReplica]) -> None:
-        tgt = min(cands, key=lambda r: (r.load, r.rid))
+    def _dispatch(self, g: int, t: float,
+                  replicas: List[_VecReplica]) -> None:
+        # mirror the heap engine's requeue dispatch: progressively wider
+        # pools, each filtered to replicas whose KV fits the sequence;
+        # shed as oversized if no live replica can hold it
+        need = self.kvneed_a[g]
+        tgt = None
+        for pool in (
+                [r for r in replicas
+                 if r.active and not r.draining and not r.failed],
+                [r for r in replicas if r.active and not r.failed],
+                [r for r in replicas if not r.failed],
+                replicas):
+            fit = [r for r in pool if need <= r.kv_capacity]
+            if fit:
+                tgt = min(fit, key=lambda r: (r.load, r.rid))
+                break
+        if tgt is None:
+            self._shed(g, t, "oversized")
+            return
         self.replica_a[g] = tgt.rid
         tgt.waiting.append(g)
         tgt.load += 1
@@ -549,14 +589,33 @@ class VectorFleetSimulator:
         kvn = self.kvneed_a
         # least-loaded greedy over (load, rid) via a small heap — the
         # same assignment the per-request min() would produce, without
-        # scanning every candidate per request
+        # scanning every candidate per request.  Heterogeneous fleets
+        # take the fit-aware path: pop until a replica's KV fits,
+        # matching the heap engine's per-request candidate filter.
+        hetero = len({r.kv_capacity for r in cands}) > 1
+        cand_max_kv = max(r.kv_capacity for r in cands)
         hp = [(r.load, r.rid, r) for r in cands]
         heapq.heapify(hp)
         for g in range(lo, hi):
             if kvn[g] > kv_cap:
                 self._shed(g, t, "oversized")
                 continue
-            load, rid, tgt = heapq.heappop(hp)
+            if kvn[g] > cand_max_kv:
+                # fits the fleet's largest slot but no preferred
+                # candidate: fall through to the wide-pool dispatch
+                self._dispatch(g, t, replicas)
+                continue
+            if not hetero:
+                load, rid, tgt = heapq.heappop(hp)
+            else:
+                skipped = []
+                while True:
+                    load, rid, tgt = heapq.heappop(hp)
+                    if kvn[g] <= tgt.kv_capacity:
+                        break
+                    skipped.append((load, rid, tgt))
+                for it in skipped:
+                    heapq.heappush(hp, it)
             self.replica_a[g] = rid
             tgt.waiting.append(g)
             tgt.load = load + 1
@@ -565,7 +624,7 @@ class VectorFleetSimulator:
             heapq.heappush(hp, (load + 1, rid, tgt))
 
     def _requeue_or_shed(self, g: int, t: float,
-                         cands: List[_VecReplica]) -> None:
+                         replicas: List[_VecReplica]) -> None:
         cfg = self.cfg
         if self.retries_a[g] > cfg.max_retries:
             self._shed(g, t, "retry_budget")
@@ -577,7 +636,7 @@ class VectorFleetSimulator:
         # KV and generated tokens died with the replica: generation (and
         # TTFT) restarts on the retry, matching the heap engine
         self.first_a[g] = np.nan
-        self._dispatch(g, t, cands)
+        self._dispatch(g, t, replicas)
 
     def _crash(self, replicas: List[_VecReplica], r: _VecReplica, t: float,
                fault_log: List[FaultEvent]) -> None:
@@ -602,12 +661,11 @@ class VectorFleetSimulator:
         fault_log.append(FaultEvent(t=t, kind="crash", replica=r.rid,
                                     n_displaced=len(inflight)
                                     + len(queued)))
-        cands = self._cands(replicas)
         for g in inflight:
             self.retries_a[g] += 1        # computed KV was lost
-            self._requeue_or_shed(g, t, cands)
+            self._requeue_or_shed(g, t, replicas)
         for g in queued:                  # rerouted, not a retry
-            self._requeue_or_shed(g, t, cands)
+            self._requeue_or_shed(g, t, replicas)
 
     # -- control ------------------------------------------------------------
     def _control(self, replicas: List[_VecReplica], t: float,
@@ -648,7 +706,8 @@ class VectorFleetSimulator:
         cfg = self.cfg
         act = Action(n_replicas=int(np.clip(act.n_replicas, 1,
                                             cfg.max_replicas)),
-                     batch_cap=max(int(act.batch_cap), 1))
+                     batch_cap=max(int(act.batch_cap), 1),
+                     hardware=act.hardware)
         n_active = sum(1 for r in replicas if r.active and not r.draining)
         if act.n_replicas > n_active:
             need = act.n_replicas - n_active
@@ -664,7 +723,8 @@ class VectorFleetSimulator:
                     push(now + cfg.provision_delay_s, _PROVISION, r)
                     need -= 1
             for _ in range(need):
-                nr = self._new_replica(len(replicas), now, active=False)
+                nr = self._new_replica(len(replicas), now, active=False,
+                                       hardware=act.hardware)
                 nr.provisioning = True
                 replicas.append(nr)
                 push(now + cfg.provision_delay_s, _PROVISION, nr)
@@ -707,7 +767,7 @@ class VectorFleetSimulator:
                 if admit:
                     f = self._slow(r.rid, r.clock)
                     iis = self.ii_a[admit]
-                    dur = float(self.prefill_f(
+                    dur = float(r.prefill_f(
                         float(iis.sum()),
                         float((iis * iis).sum()))) * f
                     r.pend_kind = "prefill"
@@ -797,7 +857,7 @@ class VectorFleetSimulator:
             bb = n - cnt                  # alive before step s / after s
             bb_step = bb[:K_try]
             ctxsum = sufctx[cnt[:K_try]] + s[:K_try] * bb_step
-            d = self.traj(bb_step, ctxsum) * f
+            d = r.traj(bb_step, ctxsum) * f
             cum = clock + np.cumsum(d)
             K_adm = None
             if need0 is not None:

@@ -58,6 +58,12 @@ class SimConfig:
     max_prefill_requests: int = 8
     n_replicas: int = 1
     max_replicas: int = 8
+    # heterogeneous fleets: per-slot hardware.  Replica rid takes
+    # ``replica_setups[rid % len(replica_setups)]`` (cycling keeps
+    # autoscaler-created replicas deterministic); None -> every replica
+    # runs ``setup``.  A policy Action naming a hardware profile
+    # overrides the slot default for replicas it creates.
+    replica_setups: Optional[Tuple[ServingSetup, ...]] = None
     control_interval_s: float = 2.0
     provision_delay_s: float = 1.0
     drain_s: float = 120.0            # grace period past the horizon
@@ -74,6 +80,31 @@ class SimConfig:
     # quantized to bucket boundaries — the documented parity tolerance
     bucket_s: float = 0.25
     traj_backend: str = "numpy"       # "numpy" | "jax" decode-run math
+
+    def setup_for(self, rid: int, hardware: Optional[str] = None
+                  ) -> ServingSetup:
+        """Resolve the ServingSetup for replica ``rid``.
+
+        ``hardware`` (a ``repro.perfmodel.hardware`` profile name, e.g.
+        from ``Action.hardware``) overrides the slot default's
+        accelerator while keeping the model/parallelism unchanged."""
+        base = (self.replica_setups[rid % len(self.replica_setups)]
+                if self.replica_setups else self.setup)
+        if hardware is not None and hardware != base.hw.name:
+            from repro.perfmodel.hardware import profile
+            base = dataclasses.replace(base, hw=profile(hardware))
+        return base
+
+    def kv_cap_for(self, setup: ServingSetup) -> float:
+        # kv_capacity_override is uniform across hardware — it models a
+        # software cap (e.g. a scheduler limit), not HBM size
+        return (self.kv_capacity_override
+                if self.kv_capacity_override is not None
+                else kv_capacity_tokens(setup))
+
+    def slot_setups(self) -> Tuple[ServingSetup, ...]:
+        return tuple(self.replica_setups) if self.replica_setups \
+            else (self.setup,)
 
 
 @dataclasses.dataclass
@@ -253,6 +284,10 @@ class Observation:
 class Action:
     n_replicas: int
     batch_cap: int
+    # hardware profile name for replicas this action *creates* (scale-up
+    # beyond warm/decommissioned capacity).  None -> the slot default
+    # from SimConfig.setup_for.  Existing replicas never migrate.
+    hardware: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -266,6 +301,13 @@ class SimResult:
     t_start: float = 0.0              # epochal replay offset (absolute)
     availability: float = 1.0         # healthy / (healthy + crashed) rs
     fault_log: List[FaultEvent] = dataclasses.field(default_factory=list)
+    # rid -> hardware profile name; heterogeneous fleets use this to
+    # attribute steps/requests to the hardware that served them
+    replica_hw: Dict[int, str] = dataclasses.field(default_factory=dict)
+
+    @property
+    def hardware_names(self) -> Tuple[str, ...]:
+        return tuple(sorted(set(self.replica_hw.values())))
 
     @property
     def completed(self) -> List[RequestRecord]:
@@ -438,13 +480,17 @@ class FleetSimulator:
         self.trace = trace
         self.cfg = cfg
         self.policy = policy
-        self.kv_cap = (cfg.kv_capacity_override
-                       if cfg.kv_capacity_override is not None
-                       else kv_capacity_tokens(cfg.setup))
+        # admission bound: a request that cannot fit the *largest* slot's
+        # KV can never be served anywhere; per-replica fit is re-checked
+        # at dispatch (heterogeneous fleets have smaller replicas too)
+        self.kv_cap = max(cfg.kv_cap_for(s) for s in cfg.slot_setups())
 
-    def _new_replica(self, rid: int, active: bool = True) -> Replica:
-        r = Replica(rid, self.cfg.setup, self.cfg.batch_cap,
-                    self.cfg.max_prefill_requests, self.kv_cap)
+    def _new_replica(self, rid: int, active: bool = True,
+                     hardware: Optional[str] = None) -> Replica:
+        setup = self.cfg.setup_for(rid, hardware)
+        r = Replica(rid, setup, self.cfg.batch_cap,
+                    self.cfg.max_prefill_requests,
+                    self.cfg.kv_cap_for(setup))
         r.active = active
         return r
 
@@ -515,13 +561,25 @@ class FleetSimulator:
             n_pending -= 1
 
         def dispatch(rec: RequestRecord):
-            # crashed replicas take no new work; fall back progressively
-            cands = [r for r in replicas
-                     if r.active and not r.draining and not r.failed]
-            if not cands:
-                cands = ([r for r in replicas if r.active and not r.failed]
-                         or [r for r in replicas if not r.failed]
-                         or replicas)
+            # crashed replicas take no new work; fall back progressively.
+            # Heterogeneous fleets: a candidate must have enough KV for
+            # the whole sequence — if no live replica fits it (e.g. the
+            # only large-memory replica crashed), shed as oversized.
+            need = float(rec.ii + rec.oo)
+            cands = None
+            for pool in (
+                    [r for r in replicas
+                     if r.active and not r.draining and not r.failed],
+                    [r for r in replicas if r.active and not r.failed],
+                    [r for r in replicas if not r.failed],
+                    replicas):
+                fit = [r for r in pool if need <= r.kv_capacity]
+                if fit:
+                    cands = fit
+                    break
+            if cands is None:
+                shed(rec, now, "oversized")
+                return
             tgt = min(cands, key=lambda r: (r.load, r.rid))
             rec.replica = tgt.rid
             tgt.waiting.append(_Seq(rec))
@@ -558,7 +616,8 @@ class FleetSimulator:
         def apply_action(act: Action):
             act = Action(n_replicas=int(np.clip(act.n_replicas, 1,
                                                 cfg.max_replicas)),
-                         batch_cap=max(int(act.batch_cap), 1))
+                         batch_cap=max(int(act.batch_cap), 1),
+                         hardware=act.hardware)
             n_active = sum(1 for r in replicas
                            if r.active and not r.draining)
             if act.n_replicas > n_active:
@@ -577,7 +636,8 @@ class FleetSimulator:
                         push(now + cfg.provision_delay_s, _PROVISION, r)
                         need -= 1
                 for _ in range(need):
-                    nr = self._new_replica(len(replicas), active=False)
+                    nr = self._new_replica(len(replicas), active=False,
+                                           hardware=act.hardware)
                     nr.provisioning = True
                     replicas.append(nr)
                     push(now + cfg.provision_delay_s, _PROVISION, nr)
@@ -714,7 +774,9 @@ class FleetSimulator:
                          controls=controls, t_start=cfg.t_start,
                          availability=(replica_seconds / denom
                                        if denom > 0 else 1.0),
-                         fault_log=fault_log)
+                         fault_log=fault_log,
+                         replica_hw={r.rid: r.setup.hw.name
+                                     for r in replicas})
 
 
 def simulate(trace: Trace, cfg: SimConfig, policy=None,

@@ -10,7 +10,7 @@ from _sim_invariants import assert_sim_invariants
 from repro.configs import get_config
 from repro.core.dataset import Dataset
 from repro.perfmodel.simulator import ServingSetup
-from repro.perfmodel.tpu import TPU_V5E
+from repro.perfmodel.hardware import TPU_V5E
 from repro.serving import adapter
 from repro.serving.adapter import WindowSummary, windows_to_dataset
 from repro.serving.autoscaler import ALAAutoscaler

@@ -10,7 +10,7 @@ from repro.configs import get_config
 from repro.perfmodel.simulator import (ServingSetup, decode_step_time_group,
                                        decode_time_fn, prefill_step_time,
                                        prefill_time_fn)
-from repro.perfmodel.tpu import TPU_V5E
+from repro.perfmodel.hardware import TPU_V5E
 from repro.serving import adapter
 from repro.serving.autoscaler import ALAAutoscaler, StaticPolicy
 from repro.serving.simulator import (RequestRecord, SimConfig, SimResult,

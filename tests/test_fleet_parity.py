@@ -17,7 +17,7 @@ import pytest
 from _sim_invariants import assert_sim_invariants
 from repro.configs import get_config
 from repro.perfmodel.simulator import ServingSetup
-from repro.perfmodel.tpu import TPU_V5E
+from repro.perfmodel.hardware import TPU_V5E, profile
 from repro.serving.faults import FaultConfig, injector
 from repro.serving.simulator import SimConfig, simulate
 from repro.serving.traces import (FleetTraceConfig, TenantConfig,
@@ -192,6 +192,27 @@ def test_parity_multitenant_fleet_trace(setup):
         assert abs(hp[name]["attainment"] - fp[name]["attainment"]) <= 0.05
         assert abs(hp[name]["goodput_share"]
                    - fp[name]["goodput_share"]) <= 0.02
+
+
+def test_parity_mixed_hardware_fleet(setup):
+    """Heterogeneous fleet (TPU v5e + GPU L4 slots): the engines must
+    agree on which hardware every replica runs and on per-request
+    metrics.  A load-tie flip now swaps a request between *dissimilar*
+    replicas, so the flip perturbation is larger than in homogeneous
+    scenarios — the contract here matches the congested kv-throttled
+    tier, with shed decisions still exact."""
+    l4 = ServingSetup(cfg=get_config("llama3.1-8b"),
+                      hw=profile("gpu-l4"), chips=4)
+    tr = make_trace(TraceConfig(arrival="poisson", rate=5.0,
+                                horizon_s=45.0, seed=19))
+    h, f = _pair(tr, setup, batch_cap=32, n_replicas=2,
+                 replica_setups=(setup, l4))
+    assert_sim_invariants(h, tr)
+    assert_sim_invariants(f, tr)
+    assert h.accounting() == f.accounting()
+    assert h.replica_hw == f.replica_hw
+    assert set(h.replica_hw.values()) == {"tpu-v5e", "gpu-l4"}
+    _assert_close(h, f, p95_s=3.0, outlier_s=12.0, outlier_frac=0.15)
 
 
 def test_parity_tightens_with_bucket(setup):

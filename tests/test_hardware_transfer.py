@@ -1,0 +1,347 @@
+"""Cross-hardware layer: descriptor distances, the deprecated ``tpu``
+shim, registry transfer (RQ4), placement-aware autoscaling, and the
+heterogeneous-fleet data path."""
+import importlib
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.annealing import SAConfig
+from repro.core.dataset import Dataset
+from repro.core.expmodel import exp_model
+from repro.core.registry import ModelRegistry
+from repro.perfmodel.hardware import (PROFILES, TPU_V5E, HardwareProfile,
+                                      feature_names, feature_row,
+                                      hardware_distance, profile)
+from repro.perfmodel.simulator import ServingSetup
+from repro.serving.adapter import (windows_to_dataset,
+                                   windows_to_datasets_by_hardware)
+from repro.serving.autoscaler import ALAAutoscaler
+from repro.serving.simulator import Action, Observation, SimConfig, simulate
+from repro.serving.traces import TraceConfig, make_trace
+
+SRC = pathlib.Path(__file__).resolve().parents[1] / "src"
+
+
+# ------------------------------------------------------------------ shim
+def test_tpu_shim_warns_and_reexports():
+    sys.modules.pop("repro.perfmodel.tpu", None)
+    with pytest.warns(DeprecationWarning, match="repro.perfmodel.hardware"):
+        shim = importlib.import_module("repro.perfmodel.tpu")
+    # aliases, not copies: profile identity survives the move
+    assert shim.TPU_V5E is TPU_V5E
+    assert shim.PROFILES is PROFILES
+    assert shim.hardware_distance is hardware_distance
+
+
+def test_no_in_repo_imports_of_deprecated_shim():
+    """Everything under src/ must import repro.perfmodel.hardware; the
+    shim exists only for out-of-tree callers."""
+    offenders = []
+    for path in SRC.rglob("*.py"):
+        if path.name == "tpu.py" and path.parent.name == "perfmodel":
+            continue
+        if "perfmodel.tpu" in path.read_text() \
+                or "perfmodel import tpu" in path.read_text():
+            offenders.append(str(path.relative_to(SRC)))
+    assert not offenders, f"deprecated tpu imports remain: {offenders}"
+
+
+# ------------------------------------------------------------ descriptors
+def test_profiles_registered_and_featurized():
+    # the tentpole floor: TPU baseline plus >= 4 GPU/NPU descriptors
+    assert len(PROFILES) >= 6
+    assert sum(1 for n in PROFILES if not n.startswith("tpu")) >= 4
+    for name, p in PROFILES.items():
+        assert p.name == name
+        row = feature_row(p)
+        assert tuple(row) == feature_names()
+        assert all(np.isfinite(v) for v in row.values())
+        # delivered rooflines are positive by construction
+        assert all(v > 0 for v in p.features().values())
+
+
+def test_hardware_distance_metric_properties():
+    names = sorted(PROFILES)
+    for a in names:
+        assert hardware_distance(a, a) == 0.0
+        for b in names:
+            d = hardware_distance(a, b)
+            assert d >= 0.0 and np.isfinite(d)
+            assert d == pytest.approx(hardware_distance(b, a))
+    # names and descriptor objects are interchangeable
+    assert hardware_distance("tpu-v5e", PROFILES["tpu-v4"]) \
+        == pytest.approx(hardware_distance(PROFILES["tpu-v5e"], "tpu-v4"))
+    # the TPU sibling sits closer to v5e than a small inference GPU
+    assert hardware_distance("tpu-v5e", "tpu-v4") \
+        < hardware_distance("tpu-v5e", "gpu-l4")
+    with pytest.raises(KeyError, match="unknown hardware"):
+        profile("martian-npu")
+
+
+def test_flops_at_dtype_scaling():
+    p = PROFILES["gpu-h100-sxm"]
+    bf16 = p.flops_at(2)
+    assert bf16 == pytest.approx(p.peak_flops)
+    assert p.flops_at(1) > bf16          # fp8 speedup on H100
+    assert p.flops_at(4) < bf16          # fp32 slowdown everywhere
+
+
+# --------------------------------------------------------- registry transfer
+def _grid_rows(acc: str, cap: float, rng) -> list:
+    """Synthetic saturating-throughput rows on one accelerator, with the
+    hardware identity and descriptor feature columns the adapter and the
+    bench datasets now stamp."""
+    hw_cols = feature_row(acc) if acc in PROFILES else {
+        k: 0.0 for k in feature_names()}
+    bbs = np.array([1, 2, 4, 8, 16, 32, 64], float)
+    rows = []
+    for ii in (128.0, 512.0):
+        for oo in (128.0, 256.0):
+            for bb, t in zip(bbs, exp_model(bbs, 0.9 * cap, 0.08, cap)):
+                rows.append(dict(model="m", acc=acc, acc_count=4, back="f",
+                                 prec="bf16", mode="serve", ii=ii, oo=oo,
+                                 bb=bb, thpt=t * rng.normal(1.0, 0.01),
+                                 **hw_cols))
+    return rows
+
+
+@pytest.fixture(scope="module")
+def fitted_registry():
+    rng = np.random.default_rng(0)
+    src = Dataset.from_rows(_grid_rows("tpu-v5e", 4000.0, rng))
+    reg = ModelRegistry().fit(src, n_estimators=20)
+    reg.fit_uncertainty(
+        src, sa_cfg=SAConfig(n_iters=3, seed=0, n_chains=2,
+                             gbt_kw=dict(n_estimators=15)),
+        n_estimators=15)
+    return reg, src
+
+
+def _relabel(src: Dataset, acc: str) -> Dataset:
+    cols = dict(src.cols)
+    cols["acc"] = np.full(len(src), acc)
+    hw = (feature_row(acc) if acc in PROFILES
+          else {k: 0.0 for k in feature_names()})
+    for k, v in hw.items():
+        cols[k] = np.full(len(src), v)
+    return Dataset(cols)
+
+
+def test_donor_is_nearest_fitted_hardware(fitted_registry):
+    reg, src = fitted_registry
+    rng = np.random.default_rng(1)
+    far = Dataset.from_rows(_grid_rows("gpu-l4", 900.0, rng))
+    reg2 = ModelRegistry().fit(src.concat(far), n_estimators=20)
+    v5e, l4 = None, None
+    hi = reg2._active_keys.index("acc")
+    for combo in reg2.combos:
+        if combo[hi] == "tpu-v5e":
+            v5e = combo
+        if combo[hi] == "gpu-l4":
+            l4 = combo
+    query = v5e[:hi] + ("tpu-v4",) + v5e[hi + 1:]
+    assert reg2.donor_for(query) == v5e       # v4 is nearer v5e than l4
+    # descriptor distance, not vendor family, picks the donor: a100's
+    # delivered rooflines sit nearer the v5e than the small L4's
+    query_far = l4[:hi] + ("gpu-a100-80g",) + l4[hi + 1:]
+    assert reg2.donor_for(query_far) == v5e
+    # unregistered hardware has no finite descriptor distance to any
+    # candidate, so nothing qualifies as its donor
+    query_alien = v5e[:hi] + ("martian-npu",) + v5e[hi + 1:]
+    assert reg2.donor_for(query_alien) is None
+
+
+def test_transfer_confidence_strictly_below_native(fitted_registry):
+    reg, src = fitted_registry
+    native_err, native_d, native_conf = reg.estimate(src)
+    assert np.isfinite(native_conf).all() and (native_conf > 0).all()
+    moved = _relabel(src, "tpu-v4")
+    # without transfer: unknown combination -> degenerate sentinel
+    err0, d0, c0 = reg.estimate(moved)
+    assert np.isnan(err0).all() and np.isinf(d0).all() and (c0 == 0).all()
+    # with transfer: honest, strictly degraded confidence
+    err, d, conf = reg.estimate(moved, transfer=True)
+    assert np.isfinite(conf).all() and (conf > 0).all()
+    assert (conf < native_conf).all()
+    # workload distance reported is the donor's (pure d_min, no hw term)
+    np.testing.assert_allclose(d, native_d)
+
+
+def test_transfer_unknown_hardware_keeps_sentinel(fitted_registry):
+    reg, src = fitted_registry
+    alien = _relabel(src, "martian-npu")
+    err, d, conf = reg.estimate(alien, transfer=True)
+    assert np.isnan(err).all() and np.isinf(d).all() and (conf == 0).all()
+
+
+def test_transfer_predict_applies_scale_fn(fitted_registry):
+    reg, src = fitted_registry
+    moved = _relabel(src, "tpu-v4")
+    hi = reg._active_keys.index("acc")
+    raw = reg.predict(moved, transfer=True)
+    assert (raw > 0).all()
+
+    def scale(combo, donor, ii, oo, bb):
+        assert combo[hi] == "tpu-v4" and donor[hi] == "tpu-v5e"
+        return 1.5
+
+    scaled = reg.predict(moved, transfer=True, scale_fn=scale)
+    np.testing.assert_allclose(scaled, raw * 1.5)
+
+
+# ------------------------------------------------------------ mixed datasets
+def test_concat_keys_mixed_hardware_apart():
+    rng = np.random.default_rng(2)
+    a = Dataset.from_rows(_grid_rows("tpu-v5e", 4000.0, rng))
+    b = Dataset.from_rows(_grid_rows("gpu-l4", 900.0, rng))
+    both = a.concat(b)
+    assert len(both) == len(a) + len(b)
+    combos = both.unique_combos(["model", "acc"])
+    assert sorted(c[1] for c in combos) == ["gpu-l4", "tpu-v5e"]
+    # and the registry fits them as separate combinations
+    reg = ModelRegistry().fit(both, n_estimators=15)
+    assert len(reg.combos) == 2
+
+
+def test_concat_rejects_featureless_rows():
+    """Rows missing the hw_* descriptor columns cannot silently join a
+    featurized dataset — schema mismatch is an error, not a drop."""
+    rng = np.random.default_rng(3)
+    feat = Dataset.from_rows(_grid_rows("tpu-v5e", 4000.0, rng))
+    bare_rows = [{k: v for k, v in r.items()
+                  if not k.startswith("hw_")}
+                 for r in _grid_rows("gpu-l4", 900.0, rng)]
+    bare = Dataset.from_rows(bare_rows)
+    with pytest.raises(ValueError, match="schema mismatch"):
+        feat.concat(bare)
+    with pytest.raises(ValueError, match="schema mismatch"):
+        bare.concat(feat)
+
+
+# ------------------------------------------------------- autoscaler placement
+def _obs(**kw):
+    base = dict(now=10.0, window_s=5.0, n_arrivals=10, mean_ii=512.0,
+                mean_oo=128.0, arrival_rate=2.0, queue_len=0, n_running=8,
+                n_active_replicas=1, batch_cap=32, decode_tokens=1000,
+                busy_s=4.0, measured_tok_s=250.0)
+    base.update(kw)
+    return Observation(**base)
+
+
+def _controller(**kw):
+    return ALAAutoscaler(ala=None, hardware_pool=("tpu-v5e", "gpu-l4"),
+                         fitted_hardware="tpu-v5e", **kw)
+
+
+def test_aware_placement_prefers_fitted_hardware():
+    ctl = _controller()
+    name, pred_hw, conf_hw = ctl._choose_hardware(_obs(), 32, 100.0, 0.9)
+    assert name == "tpu-v5e"
+    assert pred_hw == pytest.approx(100.0)
+    # d_hw = 0 round-trips the Alg 8 squash exactly
+    assert conf_hw == pytest.approx(0.9)
+    assert ctl.placements and ctl.placements[-1][1] == "tpu-v5e"
+
+
+def test_aware_placement_crosses_when_scaled_throughput_wins():
+    ctl = _controller(hardware_scale={"gpu-l4": lambda ii, oo, bb: 10.0})
+    name, pred_hw, conf_hw = ctl._choose_hardware(_obs(), 32, 100.0, 0.9)
+    assert name == "gpu-l4"
+    assert pred_hw == pytest.approx(1000.0)
+    assert conf_hw < 0.9            # cross-hardware confidence is derated
+
+
+def test_roundrobin_placement_ignores_predictions():
+    ctl = _controller(placement="roundrobin",
+                      hardware_scale={"gpu-l4": lambda ii, oo, bb: 10.0})
+    seen = [ctl._choose_hardware(_obs(), 32, 100.0, 0.9)[0]
+            for _ in range(4)]
+    assert seen == ["tpu-v5e", "gpu-l4", "tpu-v5e", "gpu-l4"]
+    assert all(np.isnan(s) for _, _, s in ctl.placements)
+
+
+def test_degenerate_confidence_still_places():
+    ctl = _controller()
+    name, pred_hw, conf_hw = ctl._choose_hardware(_obs(), 32, 100.0, 0.0)
+    assert name in ctl.hardware_pool
+    assert conf_hw == 0.0
+
+
+# -------------------------------------------------- engines honor placement
+class _PinnedPolicy:
+    """Scale to 3 replicas immediately, pinning new ones to gpu-l4."""
+
+    def control(self, obs):
+        return Action(n_replicas=3, batch_cap=16, hardware="gpu-l4")
+
+
+@pytest.fixture(scope="module")
+def tpu_setup():
+    return ServingSetup(cfg=get_config("llama3.1-8b"), hw=TPU_V5E, chips=4)
+
+
+def test_action_hardware_creates_pinned_replicas(tpu_setup):
+    tr = make_trace(TraceConfig(arrival="poisson", rate=4.0,
+                                horizon_s=20.0, seed=31))
+    for engine in ("heap", "fleet"):
+        cfg = SimConfig(setup=tpu_setup, batch_cap=16, n_replicas=1,
+                        max_replicas=3)
+        res = simulate(tr, cfg, policy=_PinnedPolicy(), engine=engine)
+        # the seed replica keeps the slot default; scale-ups are pinned
+        assert res.replica_hw[0] == "tpu-v5e"
+        created = {rid: hw for rid, hw in res.replica_hw.items() if rid > 0}
+        assert created and set(created.values()) == {"gpu-l4"}
+
+
+# ------------------------------------------------ heterogeneous data path
+@pytest.fixture(scope="module")
+def hetero_result(tpu_setup):
+    l4 = ServingSetup(cfg=get_config("llama3.1-8b"),
+                      hw=profile("gpu-l4"), chips=4)
+    tr = make_trace(TraceConfig(arrival="poisson", rate=5.0,
+                                horizon_s=40.0, seed=23))
+    cfg = SimConfig(setup=tpu_setup, batch_cap=32, n_replicas=2,
+                    replica_setups=(tpu_setup, l4))
+    return simulate(tr, cfg, engine="heap"), tpu_setup, l4
+
+
+def test_adapter_rejects_heterogeneous_result(hetero_result):
+    res, tpu, l4 = hetero_result
+    assert set(res.replica_hw.values()) == {"tpu-v5e", "gpu-l4"}
+    with pytest.raises(ValueError, match="heterogeneous fleet"):
+        windows_to_dataset(res, tpu, "llama3.1-8b")
+
+
+def test_adapter_rejects_wrong_hardware_label(tpu_setup):
+    l4 = ServingSetup(cfg=get_config("llama3.1-8b"),
+                      hw=profile("gpu-l4"), chips=4)
+    tr = make_trace(TraceConfig(arrival="poisson", rate=4.0,
+                                horizon_s=30.0, seed=27))
+    res = simulate(tr, SimConfig(setup=l4, batch_cap=32, n_replicas=2),
+                   engine="heap")
+    with pytest.raises(ValueError, match="wrong hardware"):
+        windows_to_dataset(res, tpu_setup, "llama3.1-8b")
+
+
+def test_windows_split_by_hardware(hetero_result):
+    res, tpu, l4 = hetero_result
+    out = windows_to_datasets_by_hardware(
+        res, {"tpu-v5e": tpu, "gpu-l4": l4}, "llama3.1-8b")
+    assert set(out) <= {"tpu-v5e", "gpu-l4"} and out
+    for hw, ds in out.items():
+        assert (ds["acc"] == hw).all()
+        assert (ds["thpt"] > 0).all()
+        want = feature_row(hw)
+        for k, v in want.items():
+            np.testing.assert_allclose(ds[k].astype(float), v)
+    # every attributed row's hardware features differ across tiers
+    if len(out) == 2:
+        assert not np.isclose(out["tpu-v5e"]["hw_flops"][0],
+                              out["gpu-l4"]["hw_flops"][0])
+    with pytest.raises(KeyError, match="no ServingSetup"):
+        windows_to_datasets_by_hardware(res, {"tpu-v5e": tpu},
+                                        "llama3.1-8b")

@@ -7,9 +7,12 @@ from repro.configs import get_config
 from repro.core.dataset import Dataset
 from repro.core.registry import ModelRegistry
 from repro.perfmodel.simulator import (ServingSetup, decode_step_time,
-                                       prefill_time, sample_throughput,
-                                       throughput, weights_read_bytes)
-from repro.perfmodel.tpu import LEGACY_GPU, TPU_V5E
+                                       decode_step_time_group,
+                                       decode_time_fn, prefill_step_time,
+                                       prefill_time, prefill_time_fn,
+                                       sample_throughput, throughput,
+                                       weights_read_bytes)
+from repro.perfmodel.hardware import LEGACY_GPU, PROFILES, TPU_V5E
 
 
 @pytest.fixture(scope="module")
@@ -77,6 +80,31 @@ def test_prefill_time_scales_superlinearly_in_ii(llama_setup):
     t1 = prefill_time(llama_setup, 1024, 8)
     t2 = prefill_time(llama_setup, 16384, 8)
     assert t2 > 12 * t1   # quadratic attention term kicks in
+
+
+@pytest.mark.parametrize("hw_name", sorted(PROFILES))
+@pytest.mark.parametrize("model", ["llama3.1-8b", "phi3.5-moe-42b-a6.6b"])
+def test_closures_match_scalar_reference(hw_name, model):
+    """The vectorized serving closures must agree with the scalar
+    roofline references on *every* registered profile — the cost model
+    is pure in the descriptor, so no accelerator gets special-cased
+    math (dense and MoE weight-read branches both covered)."""
+    setup = ServingSetup(cfg=get_config(model), hw=PROFILES[hw_name],
+                         chips=4)
+    dec = decode_time_fn(setup)
+    pre = prefill_time_fn(setup)
+    batches = ([], [128], [512] * 8, [128, 512, 2048, 100],
+               [4096] * 64)
+    for ctxs in batches:
+        arr = np.asarray(ctxs, np.float64)
+        ref_d = decode_step_time_group(setup, arr)
+        got_d = float(dec(len(arr), float(arr.sum())))
+        assert got_d == pytest.approx(ref_d, rel=1e-9, abs=1e-15), \
+            (hw_name, model, "decode", ctxs)
+        ref_p = prefill_step_time(setup, arr)
+        got_p = float(pre(float(arr.sum()), float((arr * arr).sum())))
+        assert got_p == pytest.approx(ref_p, rel=1e-9, abs=1e-15), \
+            (hw_name, model, "prefill", ctxs)
 
 
 # ------------------------------------------------------------------ dataset

@@ -10,7 +10,7 @@ from repro.perfmodel.simulator import (ServingSetup, decode_step_time,
                                        decode_step_time_group,
                                        kv_capacity_tokens, prefill_step_time,
                                        prefill_time, sample_throughput)
-from repro.perfmodel.tpu import TPU_V5E
+from repro.perfmodel.hardware import TPU_V5E, feature_names
 from _sim_invariants import assert_sim_invariants
 from repro.serving.adapter import summarize_windows, windows_to_dataset
 from repro.serving.autoscaler import ALAAutoscaler, StaticPolicy
@@ -224,7 +224,8 @@ def test_adapter_windows_and_dataset(setup, chat_trace):
     assert all(w.ii & (w.ii - 1) == 0 for w in wins)   # pow2 buckets
     ds = windows_to_dataset(res, setup, "llama3.1-8b", window_s=2.5)
     assert set(ds.cols) == {"model", "acc", "acc_count", "back", "prec",
-                            "mode", "ii", "oo", "bb", "thpt"}
+                            "mode", "ii", "oo", "bb", "thpt",
+                            *feature_names()}
     assert (ds["acc"] == "tpu-v5e").all() and (ds["acc_count"] == 4).all()
 
 
