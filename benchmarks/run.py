@@ -41,6 +41,14 @@ writes a JSON report to results/bench_report.json for EXPERIMENTS.md.
                             ordering, and a mixed TPU+GPU fleet where
                             hardware-aware placement beats blind
                             (emits BENCH_transfer.json; --smoke for CI)
+  obs_engine              — observability layer gates: <5% tracing
+                            overhead at sample_rate=1.0 on the fleet
+                            engine, heap/fleet span-statistic parity,
+                            mergeable histogram shards, a monotone
+                            confidence reliability curve from the
+                            calibration audit, and a Perfetto-loadable
+                            chrome trace (emits BENCH_obs.json;
+                            --smoke for CI)
   wallclock_engine        — real JAX engine sweep via bench.harness
                             (honors --grid-ii/--grid-oo/--grid-bb/--reps)
 
@@ -77,6 +85,50 @@ def _timed(fn, *a, **kw):
     t0 = time.perf_counter()
     out = fn(*a, **kw)
     return out, (time.perf_counter() - t0) * 1e6
+
+
+def _provenance(seed=None, **extra) -> dict:
+    """Run provenance stamped into every results/BENCH_*.json: git SHA,
+    JAX version + backend/device, wall-clock (UTC), and the scenario
+    seed — enough to answer "which code, which machine, which run
+    produced this number" from the artifact alone."""
+    import datetime
+    import platform
+    import subprocess
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=pathlib.Path(__file__).resolve().parent,
+            capture_output=True, text=True, timeout=10).stdout.strip()
+    except Exception:
+        sha = ""
+    prov = {
+        "git_sha": sha or "unknown",
+        "python": platform.python_version(),
+        "numpy": np.__version__,
+        "wall_clock_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+    }
+    try:
+        import jax
+        prov["jax"] = jax.__version__
+        prov["backend"] = jax.default_backend()
+        prov["device"] = jax.devices()[0].device_kind
+    except Exception:
+        prov["jax"] = None
+    if seed is not None:
+        prov["seed"] = seed
+    prov.update(extra)
+    return prov
+
+
+def _write_bench(filename: str, payload: dict, seed=None) -> None:
+    """The one way benchmark artifacts reach results/: provenance
+    stamped, parent dir ensured, stable JSON shape."""
+    payload = dict(payload)
+    payload["provenance"] = _provenance(seed=seed)
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / filename).write_text(json.dumps(payload, indent=1))
 
 
 # ---------------------------------------------------------------------------
@@ -384,8 +436,7 @@ def sa_engine(n_proposals: int = 60, n_chains: int = 4):
         "equal_or_better_ape": bool(min(log_b.errors) <= min(log_l.errors)),
     }
     REPORT["sa_engine"] = out
-    RESULTS.mkdir(parents=True, exist_ok=True)
-    (RESULTS / "BENCH_sa.json").write_text(json.dumps(out, indent=1))
+    _write_bench("BENCH_sa.json", out, seed=0)
     _emit("sa_engine_legacy", us_l, f"best_medAPE={log_l.best_error:.2f}%")
     _emit("sa_engine_batched", us_b,
           f"best_medAPE={log_b.best_error:.2f}%;speedup={speedup:.1f}x")
@@ -452,8 +503,7 @@ def uncertainty_engine(n_queries: int = 64, n_subsets: int = 200,
         "predicted_error_range": [float(eb.min()), float(eb.max())],
     }
     REPORT["uncertainty_engine"] = out
-    RESULTS.mkdir(parents=True, exist_ok=True)
-    (RESULTS / "BENCH_uncertainty.json").write_text(json.dumps(out, indent=1))
+    _write_bench("BENCH_uncertainty.json", out, seed=0)
     _emit("uncertainty_engine_serial", us_s, f"queries={n_queries}")
     _emit("uncertainty_engine_batched", us_b,
           f"speedup={speedup:.1f}x;max_abs_diff={max_diff:.2e}")
@@ -590,9 +640,8 @@ def serving_engine(smoke=None, ttft_slo_s: float = 2.0):
     # clobbers the committed full-run numbers
     key = "serving_engine_smoke" if smoke else "serving_engine"
     REPORT[key] = report
-    RESULTS.mkdir(parents=True, exist_ok=True)
-    (RESULTS / f"BENCH_serving{'_smoke' if smoke else ''}.json").write_text(
-        json.dumps(report, indent=1))
+    _write_bench(f"BENCH_serving{'_smoke' if smoke else ''}.json", report,
+                 seed=11)
     return report
 
 
@@ -690,9 +739,8 @@ def fleet_engine(smoke=None):
     res.check_conservation()
     key = "fleet_engine_smoke" if smoke else "fleet_engine"
     REPORT[key] = report
-    RESULTS.mkdir(parents=True, exist_ok=True)
-    (RESULTS / f"BENCH_fleet{'_smoke' if smoke else ''}.json").write_text(
-        json.dumps(report, indent=1))
+    _write_bench(f"BENCH_fleet{'_smoke' if smoke else ''}.json", report,
+                 seed=42)
     _emit(key, us,
           f"evps={evps:.0f};x_recorded={speedup_recorded:.0f};"
           f"x_inrun={speedup_inrun:.0f};"
@@ -717,7 +765,7 @@ def online_engine(smoke=None):
     from repro.core.registry import ModelRegistry
     from repro.perfmodel.simulator import (ServingSetup, sample_throughput,
                                            throughput)
-    from repro.perfmodel.hardware import TPU_V5E
+    from repro.perfmodel.hardware import TPU_V5E, feature_row
     from repro.serving.adapter import TRACE_BACKEND, windows_to_dataset
     from repro.serving.autoscaler import ALAAutoscaler
     from repro.serving.simulator import SimConfig, simulate
@@ -752,7 +800,8 @@ def online_engine(smoke=None):
         # extend — not sit beside — the static seed fit
         seed_rows += [dict(model=arch, acc=TPU_V5E.name, acc_count=chips,
                            back=TRACE_BACKEND, prec="bf16", mode="serve",
-                           ii=ii, oo=oo, bb=bb, thpt=float(t))
+                           ii=ii, oo=oo, bb=bb, thpt=float(t),
+                           **feature_row(TPU_V5E))
                       for ii, oo, bb in grid
                       for t in sample_throughput(setups[arch], ii, oo, bb,
                                                  2, rng)]
@@ -862,9 +911,8 @@ def online_engine(smoke=None):
     }
     key = "online_engine_smoke" if smoke else "online_engine"
     REPORT[key] = out
-    RESULTS.mkdir(parents=True, exist_ok=True)
-    (RESULTS / f"BENCH_online{'_smoke' if smoke else ''}.json").write_text(
-        json.dumps(out, indent=1))
+    _write_bench(f"BENCH_online{'_smoke' if smoke else ''}.json", out,
+                 seed=29)
     _emit("online_engine_incremental", inc_refit * 1e6,
           f"medAPE={med_inc:.2f}%;parity={parity:.2e}")
     _emit("online_engine_scratch", scratch_refit * 1e6,
@@ -890,7 +938,7 @@ def fault_engine(smoke=None, ttft_slo_s: float = 2.0):
     from repro.core.online import OnlineALA, OnlineConfig
     from repro.perfmodel.simulator import ServingSetup, sample_throughput, \
         throughput
-    from repro.perfmodel.hardware import TPU_V5E
+    from repro.perfmodel.hardware import TPU_V5E, feature_row
     from repro.serving.adapter import (TRACE_BACKEND, summarize_windows,
                                        windows_to_rows)
     from repro.serving.autoscaler import ALAAutoscaler, StaticPolicy
@@ -954,7 +1002,8 @@ def fault_engine(smoke=None, ttft_slo_s: float = 2.0):
     PRIOR_DERATE = 0.5
     seed_rows = [dict(model=arch, acc=TPU_V5E.name, acc_count=chips,
                       back=TRACE_BACKEND, prec="bf16", mode="serve",
-                      ii=ii, oo=oo, bb=bb, thpt=PRIOR_DERATE * float(t))
+                      ii=ii, oo=oo, bb=bb, thpt=PRIOR_DERATE * float(t),
+                      **feature_row(TPU_V5E))
                  for ii, oo, bb in grid
                  for t in sample_throughput(setup, ii, oo, bb, 1, rng)]
     seed_ds = Dataset.from_rows(seed_rows)
@@ -1068,9 +1117,8 @@ def fault_engine(smoke=None, ttft_slo_s: float = 2.0):
         for s in report["scenarios"].values())
     key = "fault_engine_smoke" if smoke else "fault_engine"
     REPORT[key] = report
-    RESULTS.mkdir(parents=True, exist_ok=True)
-    (RESULTS / f"BENCH_faults{'_smoke' if smoke else ''}.json").write_text(
-        json.dumps(report, indent=1))
+    _write_bench(f"BENCH_faults{'_smoke' if smoke else ''}.json", report,
+                 seed=41)
     return report
 
 
@@ -1253,9 +1301,233 @@ def transfer_engine(smoke=None, ttft_slo_s: float = 2.0):
 
     key = "transfer_engine_smoke" if smoke else "transfer_engine"
     REPORT[key] = report
+    _write_bench(f"BENCH_transfer{'_smoke' if smoke else ''}.json", report,
+                 seed=29)
+    return report
+
+
+def obs_engine(smoke=None, ttft_slo_s: float = 2.0):
+    """Observability layer end-to-end, with hard gates.
+
+    (1) Overhead: the 3-tenant fleet scenario runs untraced vs traced
+    (``ObsConfig(sample_rate=1.0)``, spans derived post-run from the
+    engine's own columns); full runs assert <5% throughput overhead.
+    (2) Span parity: heap and fleet engines on the same seeded trace
+    slice must emit equivalent span statistics (exact counts, TTFT/E2E
+    percentiles within the bucket-quantization tolerance).
+    (3) Mergeable histograms: per-tenant TTFT shards merge to the
+    whole-stream quantile within one bin width, raw values never
+    retained.  (4) Calibration: a miscalibrated-prior online loop
+    (autoscaler ticks + ingest reports into one CalibrationAudit) must
+    yield a monotone-binned confidence reliability curve.  Also writes
+    a Perfetto-loadable Chrome trace of the multi-tenant run and
+    results/BENCH_obs.json."""
+    import dataclasses as _dc
+
+    from repro.configs import get_config
+    from repro.core.annealing import SAConfig
+    from repro.core.dataset import Dataset
+    from repro.core.online import OnlineALA, OnlineConfig
+    from repro.obs import (CalibrationAudit, ObsConfig, StreamHist,
+                           percentile_with_inf, write_chrome_trace,
+                           write_jsonl)
+    from repro.obs.tracing import queue_depth_series, span_hists, span_stats
+    from repro.perfmodel.simulator import (ServingSetup, sample_throughput,
+                                           throughput)
+    from repro.perfmodel.hardware import TPU_V5E, feature_row
+    from repro.serving.adapter import (TRACE_BACKEND, summarize_windows,
+                                       windows_to_rows)
+    from repro.serving.autoscaler import ALAAutoscaler
+    from repro.serving.simulator import SimConfig, simulate
+    from repro.serving.traces import (FleetTraceConfig, TenantConfig,
+                                      TraceConfig, make_fleet_trace,
+                                      make_trace, mix)
+
+    smoke = OPTS["smoke"] if smoke is None else smoke
+    suffix = "_smoke" if smoke else ""
+    arch = "llama3.1-8b"
+    setup = ServingSetup(cfg=get_config(arch), hw=TPU_V5E, chips=4)
+
+    # -- (1) overhead gate on the multi-tenant fleet scenario ---------------
+    horizon = 60.0 if smoke else 600.0
+    fcfg = FleetTraceConfig(tenants=(
+        TenantConfig(name="chat",
+                     trace=TraceConfig(arrival="poisson", rate=30.0,
+                                       shape_mix=mix(("chat", 1.0))),
+                     ttft_slo_s=1.5, diurnal_amp=0.4),
+        TenantConfig(name="summarize",
+                     trace=TraceConfig(arrival="gamma", rate=8.0, cv=2.0,
+                                       shape_mix=mix(("summarize", 1.0))),
+                     ttft_slo_s=8.0),
+        TenantConfig(name="generate",
+                     trace=TraceConfig(arrival="mmpp", rate=12.0,
+                                       burst_rate=24.0,
+                                       shape_mix=mix(("generate", 1.0))),
+                     ttft_slo_s=4.0, flash_crowds=2, flash_mult=3.0,
+                     flash_dur_s=15.0),
+    ), horizon_s=horizon, seed=42)
+    tr = make_fleet_trace(fcfg)
+    cfg = SimConfig(setup=setup, batch_cap=64, n_replicas=8,
+                    max_replicas=8, bucket_s=0.5)
+    cfg_obs = _dc.replace(cfg, obs=ObsConfig(sample_rate=1.0))
+    simulate(tr, cfg, engine="fleet")               # warm-up
+    base_us = min(_timed(simulate, tr, cfg, engine="fleet")[1]
+                  for _ in range(3))
+    res_obs, obs_us = _timed(simulate, tr, cfg_obs, engine="fleet")
+    obs_us = min([obs_us] + [_timed(simulate, tr, cfg_obs,
+                                    engine="fleet")[1] for _ in range(2)])
+    overhead = obs_us / base_us - 1.0
+    evps_base = res_obs.n_events / (base_us / 1e6)
+    evps_obs = res_obs.n_events / (obs_us / 1e6)
+    assert res_obs.spans is not None \
+        and res_obs.spans.n == len(tr.requests), "span capture incomplete"
+    # full runs gate at the ISSUE's 5%; smoke runs are sub-second on CI
+    # boxes where timer noise alone exceeds that, so gate loosely there
+    cap = 0.25 if smoke else 0.05
+    assert overhead < cap, (
+        f"tracing overhead {overhead * 100:.1f}% >= {cap * 100:.0f}% "
+        f"at sample_rate=1.0")
+
+    # -- (2) heap-vs-fleet span-statistic parity on a seeded slice ----------
+    sl = tr.slice(0.0, 20.0 if smoke else 60.0)
+    h = simulate(sl, cfg_obs, engine="heap")
+    f = simulate(sl, cfg_obs, engine="fleet")
+    sh, sf = span_stats(h.spans), span_stats(f.spans)
+    assert sh["n_spans"] == sf["n_spans"], (sh["n_spans"], sf["n_spans"])
+    assert sh["n_shed"] == sf["n_shed"], (sh["n_shed"], sf["n_shed"])
+    assert sh["out_tokens"] == sf["out_tokens"]
+    # fleet admissions are quantized to bucket boundaries: percentile
+    # deltas are bounded by the bucket width plus the parity-test margin
+    tol50 = cfg.bucket_s + 0.35
+    tol95 = cfg.bucket_s + 1.0
+    for k, tol in (("ttft_p50_s", tol50), ("ttft_p95_s", tol95),
+                   ("e2e_p50_s", tol50), ("e2e_p95_s", tol95)):
+        a, b = sh[k], sf[k]
+        if np.isfinite(a) or np.isfinite(b):
+            assert abs(a - b) <= tol, f"span parity {k}: {a} vs {b}"
+
+    # -- (3) mergeable per-tenant histogram shards --------------------------
+    shards = span_hists(res_obs.spans, n_bins=48,
+                        by=res_obs.spans.tenant)
+    merged = StreamHist.merged(shards.values())
+    ttft_all = res_obs.spans.ttft_s()
+    exact_p95 = percentile_with_inf(ttft_all, 95.0)
+    hist_p95 = merged.quantile(95.0)
+    fin = ttft_all[np.isfinite(ttft_all)]
+    bin_w = ((fin.max() - fin.min()) / 46.0) if len(fin) else 0.0
+    if np.isfinite(exact_p95):
+        assert abs(hist_p95 - exact_p95) <= bin_w + 1e-9, (
+            f"merged-shard p95 {hist_p95} vs exact {exact_p95} "
+            f"(bin width {bin_w})")
+    qd = queue_depth_series(res_obs.spans, bucket_s=cfg.bucket_s,
+                            t_end=res_obs.sim_end_s)
+    qd_hist = StreamHist.from_values(qd["depth"].astype(float), 32)
+
+    # -- Perfetto-loadable trace of the multi-tenant run --------------------
+    trace_path = RESULTS / f"obs_trace_fleet{suffix}.json"
     RESULTS.mkdir(parents=True, exist_ok=True)
-    (RESULTS / f"BENCH_transfer{'_smoke' if smoke else ''}.json"
-     ).write_text(json.dumps(report, indent=1))
+    write_chrome_trace(res_obs, trace_path,
+                       max_step_events=2000 if smoke else 20000,
+                       max_span_events=500 if smoke else 5000)
+    tj = json.loads(trace_path.read_text())
+    assert tj["traceEvents"], "empty chrome trace"
+    assert all("ph" in e and "pid" in e for e in tj["traceEvents"])
+
+    # -- (4) calibration audit: miscalibrated prior, online loop ------------
+    n_epochs = 3 if smoke else 6
+    epoch_s = 10.0 if smoke else 20.0
+    REF_II, REF_OO = 512, 192
+    cap_req_s = throughput(setup, REF_II, REF_OO, 64) / REF_OO
+    cal_tr = make_trace(TraceConfig(
+        arrival="mmpp", rate=1.2 * cap_req_s, burst_rate=2.5 * cap_req_s,
+        horizon_s=n_epochs * epoch_s,
+        shape_mix=mix(("chat", 0.7), ("generate", 0.3)), seed=43))
+    grid = [(ii, oo, bb)
+            for ii in ((128, 512, 2048) if smoke else
+                       (128, 256, 512, 1024, 2048))
+            for oo in ((64, 256) if smoke else (64, 128, 256))
+            for bb in (1, 4, 16, 64)]
+    sa = SAConfig(n_iters=4 if smoke else 12, n_chains=2, seed=0,
+                  gbt_kw=dict(n_estimators=20, learning_rate=0.2,
+                              max_depth=3))
+    gbt_kw = dict(n_estimators=20, learning_rate=0.15)
+    rng = np.random.default_rng(0)
+    # deliberately derated prior: early ticks are wrong (high APE) at
+    # whatever confidence Alg 8 reports; mid-run recalibration from the
+    # trace telemetry restores accuracy — exactly the spread a
+    # reliability curve needs
+    PRIOR_DERATE = 0.6
+    seed_rows = [dict(model=arch, acc=TPU_V5E.name, acc_count=4,
+                      back=TRACE_BACKEND, prec="bf16", mode="serve",
+                      ii=ii, oo=oo, bb=bb, thpt=PRIOR_DERATE * float(t),
+                      **feature_row(TPU_V5E))
+                 for ii, oo, bb in grid
+                 for t in sample_throughput(setup, ii, oo, bb, 1, rng)]
+    obs_cal = ObsConfig()
+    audit = CalibrationAudit(cfg=obs_cal)
+    eng = OnlineALA(OnlineConfig(sa=sa, warm_iters=3 if smoke else 5,
+                                 gbt_kw=dict(sa.gbt_kw)), audit=audit)
+    eng.ingest(Dataset.from_rows(seed_rows), **gbt_kw)
+    combo = eng.combo_of(seed_rows[0])
+    scaler = ALAAutoscaler(ala=eng.ala_for(combo), online=eng,
+                           combo=combo, max_replicas=4, audit=audit,
+                           drift_window=4, drift_ape_threshold=25.0)
+    for e in range(n_epochs):
+        etr = cal_tr.slice(e * epoch_s, (e + 1) * epoch_s)
+        if not len(etr):
+            continue
+        res = simulate(etr, SimConfig(
+            setup=setup, batch_cap=64, n_replicas=2, max_replicas=4,
+            t_start=e * epoch_s, control_interval_s=1.0), scaler)
+        rows = windows_to_rows(
+            summarize_windows(res, window_s=epoch_s / 8.0), setup, arch)
+        if rows:
+            eng.ingest(Dataset.from_rows(rows), **gbt_kw)
+    cal = audit.summary()
+    curve = cal["reliability"]
+    n_ticks = cal["n_ticks"]
+    assert n_ticks >= 5, f"calibration audit starved: {n_ticks} ticks"
+    assert audit.counts.get("refit", 0) >= 1, "no ingest reports audited"
+    acc = curve["bin_acc"]
+    assert len(acc) >= 1 and all(
+        acc[i] <= acc[i + 1] + 1e-12 for i in range(len(acc) - 1)), (
+        f"reliability curve not monotone-binned: {curve}")
+    events_path = RESULTS / f"obs_events{suffix}.jsonl"
+    n_ev = write_jsonl(audit.events, events_path)
+
+    key = f"obs_engine{suffix}" if smoke else "obs_engine"
+    report = {
+        "smoke": bool(smoke),
+        "n_requests": len(tr),
+        "n_events": res_obs.n_events,
+        "overhead_frac": overhead,
+        "overhead_cap": cap,
+        "events_per_sec_untraced": evps_base,
+        "events_per_sec_traced": evps_obs,
+        "span_parity": {"heap": sh, "fleet": sf,
+                        "tol_p50_s": tol50, "tol_p95_s": tol95},
+        "hist_merge": {"exact_p95_s": exact_p95,
+                       "merged_p95_s": hist_p95, "bin_width_s": bin_w,
+                       "n_shards": len(shards)},
+        "queue_depth": {"p50": qd_hist.quantile(50.0),
+                        "p95": qd_hist.quantile(95.0),
+                        "max": float(qd["depth"].max())
+                        if len(qd["depth"]) else 0.0},
+        "chrome_trace": {"file": trace_path.name,
+                         "n_events": len(tj["traceEvents"])},
+        "calibration": cal,
+        "audit_events_file": events_path.name,
+        "audit_events_written": n_ev,
+        "meta": {k: v for k, v in
+                 res_obs.meta_metrics(fcfg.slo_map).items()
+                 if k != "per_tenant"},
+        "per_tenant": res_obs.per_tenant(fcfg.slo_map),
+    }
+    REPORT[key] = report
+    _write_bench(f"BENCH_obs{suffix}.json", report, seed=42)
+    _emit(key, obs_us,
+          f"overhead={overhead * 100:.1f}%;ticks={n_ticks};"
+          f"rel_bins={len(acc)};trace_evs={len(tj['traceEvents'])}")
     return report
 
 
@@ -1341,6 +1613,7 @@ BENCHMARKS.update({
     "online_engine": online_engine,
     "fault_engine": fault_engine,
     "transfer_engine": transfer_engine,
+    "obs_engine": obs_engine,
     "wallclock_engine": wallclock_engine,
 })
 

@@ -56,6 +56,25 @@ def _terms(arch, shape, tag):
             "mem": full.get("memory", {})}
 
 
+def obs_scorecard() -> str:
+    """Serving-observability scorecard from the latest ``obs_engine``
+    run (results/BENCH_obs.json, falling back to the smoke file), or
+    "" when neither exists.  Rendering lives in ``repro.obs.export``;
+    this is just the report glue."""
+    for name in ("BENCH_obs.json", "BENCH_obs_smoke.json"):
+        path = RESULTS / name
+        if path.exists():
+            break
+    else:
+        return ""
+    from repro.obs.export import scorecard_markdown
+    bench = json.loads(path.read_text())
+    title = f"Serving observability scorecard ({name})"
+    return scorecard_markdown(bench.get("meta", {}),
+                              bench.get("per_tenant", {}),
+                              bench.get("calibration"), title=title)
+
+
 def report() -> str:
     lines = ["| cell | policy | t_comp (ms) | t_mem (ms) | t_coll (ms) | "
              "dominant | bound (ms) |",
@@ -86,6 +105,9 @@ def report() -> str:
                          f"{d['baseline']['bound_s']*1e3:.1f} ms -> "
                          f"{d['optimized']['bound_s']*1e3:.1f} ms "
                          f"(x{sp:.1f})")
+    card = obs_scorecard()
+    if card:
+        lines.append("\n" + card)
     return "\n".join(lines)
 
 

@@ -163,9 +163,14 @@ class OnlineALA:
     """
 
     def __init__(self, cfg: Optional[OnlineConfig] = None,
-                 registry: Optional[ModelRegistry] = None):
+                 registry: Optional[ModelRegistry] = None,
+                 audit: Optional[object] = None):
         self.cfg = cfg or OnlineConfig()
         self.registry = registry or ModelRegistry(keys=self.cfg.keys)
+        # observability: a repro.obs.CalibrationAudit; every ingest
+        # folds its RefitReport (drift / quarantine / refit events,
+        # epoch clock) into the unified audit log
+        self.audit = audit
         self.epoch = 0
         self.history: List[RefitReport] = []
         self.quarantine: List[QuarantineRecord] = []
@@ -415,6 +420,8 @@ class OnlineALA:
             wall_s=time.perf_counter() - t_all,
             n_quarantined=n_quarantined)
         self.history.append(report)
+        if self.audit is not None:
+            self.audit.ingest_report(report)
         return report
 
     # -- serving-side reads --------------------------------------------------

@@ -1,0 +1,28 @@
+"""Observability layer: streaming metrics, request-span tracing, ALA
+calibration audit, and timeline export.
+
+The serving engines, autoscaler, and online loop all accept an
+``ObsConfig`` hook (``SimConfig.obs``, ``ALAAutoscaler.obs``,
+``OnlineALA(audit=...)``); everything here also works standalone on a
+finished ``SimResult``.  See ``docs/observability.md``.
+"""
+from repro.obs.calibration import (CalEvent, CalibrationAudit,
+                                   reliability_curve)
+from repro.obs.export import (chrome_trace, scorecard_markdown,
+                              spans_to_dicts, write_chrome_trace,
+                              write_jsonl)
+from repro.obs.metrics import (Counter, Gauge, RingLog, StreamHist,
+                               fixed_edges, percentile_with_inf,
+                               tenant_rollup)
+from repro.obs.tracing import (ObsConfig, SpanTable, queue_depth_series,
+                               record_spans, span_hists, span_stats)
+
+__all__ = [
+    "CalEvent", "CalibrationAudit", "reliability_curve",
+    "chrome_trace", "scorecard_markdown", "spans_to_dicts",
+    "write_chrome_trace", "write_jsonl",
+    "Counter", "Gauge", "RingLog", "StreamHist", "fixed_edges",
+    "percentile_with_inf", "tenant_rollup",
+    "ObsConfig", "SpanTable", "queue_depth_series", "record_spans",
+    "span_hists", "span_stats",
+]

@@ -13,3 +13,6 @@
 #   faults     — seed-deterministic fault plans (crash/restart cycles,
 #                straggler windows, telemetry corruption) injected into
 #                the simulator and the adapter stream
+# Observability (spans, mergeable histograms, calibration audit,
+# Perfetto export) hooks in via SimConfig.obs / ALAAutoscaler(obs=...)
+# and lives in repro.obs — see docs/observability.md.

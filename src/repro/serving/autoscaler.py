@@ -126,7 +126,19 @@ class ALAAutoscaler:
     placement: str = "aware"          # "aware" | "roundrobin" (blind)
     # (t, hardware, derated score) per placement decision
     placements: list = dataclasses.field(default_factory=list)
+    # observability (repro.obs): an ObsConfig and/or a CalibrationAudit.
+    # Passing `obs` with no audit builds one; every control tick then
+    # lands in the audit as a typed "tick" event (predicted vs measured
+    # throughput, Alg 7 predicted error, Alg 8 confidence) alongside the
+    # degradation / recalibration decision events.
+    obs: Optional[object] = None          # repro.obs.tracing.ObsConfig
+    audit: Optional[object] = None        # repro.obs.CalibrationAudit
+    # ring-cap for log/recalibrations/degradations/placements; None ->
+    # unbounded (falls back to obs.max_log_entries when obs is set)
+    max_log_entries: Optional[int] = None
     _rr_idx: int = dataclasses.field(default=0, repr=False)
+    _last_pred_err: float = dataclasses.field(default=float("nan"),
+                                              repr=False)
     _resid: collections.deque = dataclasses.field(
         default_factory=lambda: collections.deque(maxlen=64), repr=False)
     _generation: int = dataclasses.field(default=0, repr=False)
@@ -134,6 +146,25 @@ class ALAAutoscaler:
     _backoff_left: int = dataclasses.field(default=0, repr=False)
     _backoff_len: int = dataclasses.field(default=0, repr=False)
     _down_streak: int = dataclasses.field(default=0, repr=False)
+
+    def __post_init__(self) -> None:
+        if self.audit is None and self.obs is not None \
+                and getattr(self.obs, "enabled", True):
+            from repro.obs.calibration import CalibrationAudit
+            self.audit = CalibrationAudit(cfg=self.obs)
+        cap = self.max_log_entries or getattr(self.obs, "max_log_entries",
+                                              None)
+        if cap:
+            from repro.obs.metrics import RingLog
+            self.log = RingLog(cap, self.log)
+            self.recalibrations = RingLog(cap, self.recalibrations)
+            self.degradations = RingLog(cap, self.degradations)
+            self.placements = RingLog(cap, self.placements)
+
+    def _degrade(self, t: float, kind: str) -> None:
+        self.degradations.append((t, kind))
+        if self.audit is not None:
+            self.audit.event(t, "degradation", reason=kind)
 
     def _refresh_online(self) -> None:
         """Rebind to the engine's freshest fit for our combination —
@@ -167,6 +198,13 @@ class ALAAutoscaler:
         ape = (abs(obs.measured_tok_s - pred) / max(abs(pred), 1e-9)
                * 100.0 if np.isfinite(pred) else float("inf"))
         self._resid.append((ape, conf))
+        if self.audit is not None:
+            # the predict->observe->trust audit record: Alg 4 prediction
+            # vs the realized window, with Alg 7's own error estimate
+            # (captured by the last _predict_per_replica) riding along
+            self.audit.tick(obs.now, predicted=pred,
+                            measured=obs.measured_tok_s, confidence=conf,
+                            ape=ape, pred_err=self._last_pred_err)
         if self.online is None or self.combo is None:
             return
         if len(self._resid) < self.drift_window:
@@ -178,6 +216,10 @@ class ALAAutoscaler:
                 or med_conf < self.drift_conf_floor:
             self.online.request_refit(self.combo)
             self.recalibrations.append((obs.now, med_ape, med_conf))
+            if self.audit is not None:
+                self.audit.event(obs.now, "recalibration",
+                                 median_ape=med_ape,
+                                 median_confidence=med_conf)
             self._resid.clear()
 
     def _predict_per_replica(self, ii: float, oo: float
@@ -188,10 +230,12 @@ class ALAAutoscaler:
                                            np.full(len(bbs), oo), bbs),
                           np.float64)
         conf = 1.0
+        self._last_pred_err = float("nan")
         if self.ala.error_model is not None and self.ala.sa_log is not None:
             q = (np.full(len(bbs), ii), np.full(len(bbs), oo), bbs,
                  np.full(len(bbs), np.nan))
-            _, conf = self.ala.estimate(q)
+            pred_err, conf = self.ala.estimate(q)
+            self._last_pred_err = float(pred_err)   # Alg 7 predicted APE
         # a corrupted fit can emit NaN/inf/negative throughput; never let
         # argmax pick it — if nothing valid remains, report the
         # degenerate sentinel so the caller falls back to measured rates
@@ -252,7 +296,7 @@ class ALAAutoscaler:
         if obs.window_s < self.min_window_s:
             # degenerate zero-width window (coarse bucketed stepping):
             # arrival_rate/backlog terms would divide by ~0 — hold
-            self.degradations.append((obs.now, "zero_window"))
+            self._degrade(obs.now, "zero_window")
             return Action(n_replicas=max(obs.n_active_replicas,
                                          self.min_replicas),
                           batch_cap=obs.batch_cap)
@@ -291,7 +335,7 @@ class ALAAutoscaler:
             self._backoff_left = self._backoff_len - 1
             self._unreliable_streak = 0
             in_backoff = True
-            self.degradations.append((obs.now, "backoff"))
+            self._degrade(obs.now, "backoff")
         derate = derate_confidence(conf, self.confidence_floor,
                                    self.min_derate)
         fallback = obs.measured_tok_s > 0.0 and (
@@ -323,7 +367,7 @@ class ALAAutoscaler:
         if n < cur:
             self._down_streak += 1
             if self._down_streak < self.scale_down_patience:
-                self.degradations.append((obs.now, "hold_down"))
+                self._degrade(obs.now, "hold_down")
                 n = cur
         else:
             self._down_streak = 0

@@ -53,6 +53,7 @@ from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs.metrics import RingLog
 from repro.perfmodel.simulator import (decode_time_fn, kv_capacity_tokens,
                                        prefill_time_fn)
 from repro.serving.faults import FaultEvent
@@ -249,35 +250,13 @@ class FleetSimResult(SimResult):
         toks = int(self.req["oo"][comp].sum())
         return toks / max(self.sim_end_s - self.t_start, 1e-9)
 
-    def per_tenant(self, slo_map: Optional[Dict[str, float]] = None
-                   ) -> Dict[str, Dict[str, float]]:
-        from repro.serving.simulator import percentile_with_inf
+    def _tenant_arrays(self):
+        # raw columns straight into the shared tenant_rollup — the
+        # rollup itself lives in repro.obs.metrics, one copy for both
+        # engines
         q = self.req
-        vals = self._ttft_values()
-        comp = np.isfinite(q["done_s"])
-        total_tok = int(q["oo"][comp].sum())
-        out: Dict[str, Dict[str, float]] = {}
-        tenants = sorted(set(q["tenant"].tolist()))
-        for name in tenants:
-            m = q["tenant"] == name
-            v = vals[m]
-            slo = slo_map.get(name) if slo_map else None
-            tok = int(q["oo"][m & comp].sum())
-            out[name] = {
-                "n_requests": int(m.sum()),
-                "n_completed": int((m & comp).sum()),
-                "n_shed": int(q["shed"][m].sum()),
-                "n_retries": int(q["retries"][m].sum()),
-                "ttft_slo_s": float(slo) if slo is not None
-                else float("nan"),
-                "attainment": (float(np.mean(v <= slo))
-                               if slo is not None else float("nan")),
-                "ttft_p50_s": percentile_with_inf(v, 50.0),
-                "ttft_p95_s": percentile_with_inf(v, 95.0),
-                "ttft_p99_s": percentile_with_inf(v, 99.0),
-                "goodput_share": tok / total_tok if total_tok else 0.0,
-            }
-        return out
+        return (q["tenant"], q["oo"], np.isfinite(q["done_s"]),
+                np.asarray(q["shed"], bool), q["retries"])
 
 
 class VectorFleetSimulator:
@@ -363,6 +342,18 @@ class VectorFleetSimulator:
         self.ch_dur: List[np.ndarray] = []
         self.ch_bb: List[np.ndarray] = []
         self.ch_rep: List[Tuple[int, int]] = []
+        # observability: optional step ring cap (periodic compaction
+        # bounds peak memory at ~2x cap) + lossless step aggregates
+        obs_cfg = cfg.obs if (cfg.obs is not None
+                              and getattr(cfg.obs, "enabled", True)) \
+            else None
+        self._step_cap = getattr(obs_cfg, "max_steps", None)
+        self._comp_steps: Optional[Dict[str, np.ndarray]] = None
+        self._retained = 0
+        self._steps_dropped = 0
+        self._tot_steps = 0
+        self._tot_busy = 0.0
+        self._tot_tokens = 0
         self.win = dict(arrivals=0, ii=0, oo=0, tokens=0, busy=0.0,
                         last=cfg.t_start)
         self.n_events = 0
@@ -371,7 +362,9 @@ class VectorFleetSimulator:
         # piecewise-constant active/failed-count timeline for the
         # replica-seconds and availability integrals (exact change times)
         self.state_changes: List[Tuple[float, int, int]] = []
-        fault_log: List[FaultEvent] = []
+        fault_cap = getattr(obs_cfg, "max_fault_events", None)
+        fault_log: List[FaultEvent] = RingLog(fault_cap) if fault_cap \
+            else []
         controls: List[Tuple[float, Action]] = []
 
         replicas = [self._new_replica(i, cfg.t_start)
@@ -475,13 +468,21 @@ class VectorFleetSimulator:
                "done_s": self.done_a, "retries": self.retries_a,
                "shed": self.shed_a, "shed_s": self.sheds_a,
                "shed_reason": self.shedr_a}
-        return FleetSimResult(
+        res = FleetSimResult(
             req=req, step_arrays=step_arrays, sim_end_s=now,
             n_events=self.n_events, replica_seconds=active_s,
             controls=controls, t_start=cfg.t_start,
             availability=(active_s / denom if denom > 0 else 1.0),
             fault_log=fault_log,
             replica_hw={r.rid: r.hw_name for r in replicas})
+        res.steps_dropped = self._steps_dropped
+        res.faults_dropped = getattr(fault_log, "n_dropped", 0)
+        res.step_totals = {"n": self._tot_steps, "busy_s": self._tot_busy,
+                           "tokens_out": self._tot_tokens}
+        if obs_cfg is not None:
+            from repro.obs.tracing import record_spans
+            res.spans = record_spans(res, obs_cfg)
+        return res
 
     # -- replica lifecycle --------------------------------------------------
     def _closures(self, setup) -> Tuple[float, object, object]:
@@ -824,6 +825,11 @@ class VectorFleetSimulator:
         self.ps_dur.append(r.pend_dur)
         self.ps_bb.append(bbn)
         self.ps_rep.append(r.rid)
+        self._retained += 1
+        self._tot_steps += 1
+        self._tot_busy += r.pend_dur
+        self._tot_tokens += bbn
+        self._maybe_compact()
         self.win["tokens"] += bbn
         self.win["busy"] += r.pend_dur
         self.n_events += 1
@@ -893,6 +899,11 @@ class VectorFleetSimulator:
             self.ch_dur.append(d[:S_apply])
             self.ch_bb.append(bb_step[:S_apply])
             self.ch_rep.append((r.rid, S_apply))
+            self._retained += S_apply
+            self._tot_steps += S_apply
+            self._tot_busy += float(d[:S_apply].sum())
+            self._tot_tokens += int(bb_step[:S_apply].sum())
+            self._maybe_compact()
             self.win["tokens"] += int(bb_step[:S_apply].sum())
             self.win["busy"] += float(d[:S_apply].sum())
             self.n_events += S_apply
@@ -906,7 +917,7 @@ class VectorFleetSimulator:
             r.pend_bb = int(bb_step[S_apply])
             r.pend_end = float(cum[S_apply])
 
-    def _collect_steps(self) -> Dict[str, np.ndarray]:
+    def _gather_steps(self) -> Dict[str, np.ndarray]:
         ts = [np.asarray(self.ps_t, np.float64)] + self.ch_t
         ds = [np.asarray(self.ps_dur, np.float64)] + self.ch_dur
         bs = [np.asarray(self.ps_bb, np.int64)] + \
@@ -915,6 +926,11 @@ class VectorFleetSimulator:
             [np.full(len(c), 1, np.uint8) for c in self.ch_t]
         rp = [np.asarray(self.ps_rep, np.int32)] + \
             [np.full(cn, rid, np.int32) for rid, cn in self.ch_rep]
+        if self._comp_steps is not None:          # prior compactions
+            c = self._comp_steps
+            ts, ds = [c["t_end"]] + ts, [c["duration_s"]] + ds
+            bs, ks = [c["bb"]] + bs, [c["kind"]] + ks
+            rp = [c["replica"]] + rp
         t_end = np.concatenate(ts) if ts else np.zeros(0)
         order = np.argsort(t_end, kind="stable")
         dur = np.concatenate(ds)[order]
@@ -922,3 +938,36 @@ class VectorFleetSimulator:
         return {"t_end": t_end[order], "replica": np.concatenate(rp)[order],
                 "kind": np.concatenate(ks)[order], "bb": bb,
                 "duration_s": dur, "tokens_out": bb}
+
+    def _maybe_compact(self) -> None:
+        """Under an ``obs.max_steps`` ring cap, fold the step buffers
+        down to the most recent ``cap`` records whenever retention
+        exceeds 2x cap — peak telemetry memory stays O(cap) however
+        long the run, while ``_tot_*`` keeps the lossless aggregates."""
+        cap = self._step_cap
+        if not cap or self._retained <= 2 * cap:
+            return
+        g = self._gather_steps()
+        n = len(g["t_end"])
+        if n > cap:
+            self._steps_dropped += n - cap
+            g = {k: v[n - cap:] for k, v in g.items()}
+        self._comp_steps = g
+        self.ps_t.clear()
+        self.ps_dur.clear()
+        self.ps_bb.clear()
+        self.ps_kind.clear()
+        self.ps_rep.clear()
+        self.ch_t.clear()
+        self.ch_dur.clear()
+        self.ch_bb.clear()
+        self.ch_rep.clear()
+        self._retained = len(g["t_end"])
+
+    def _collect_steps(self) -> Dict[str, np.ndarray]:
+        g = self._gather_steps()
+        cap = self._step_cap
+        if cap and len(g["t_end"]) > cap:         # final truncation
+            self._steps_dropped += len(g["t_end"]) - cap
+            g = {k: v[len(g["t_end"]) - cap:] for k, v in g.items()}
+        return g

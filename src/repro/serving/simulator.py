@@ -43,10 +43,15 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs.metrics import (RingLog, percentile_with_inf,  # noqa: F401
+                               tenant_rollup)
 from repro.perfmodel.simulator import (ServingSetup, decode_step_time_group,
                                        kv_capacity_tokens, prefill_step_time)
 from repro.serving.faults import FaultEvent
 from repro.serving.traces import Trace, TraceRequest
+
+# percentile_with_inf moved to repro.obs.metrics; re-exported here
+# (and imported downstream as before) for API stability.
 
 _ARRIVAL, _STEP_DONE, _CONTROL, _PROVISION, _CRASH, _RESTORE = range(6)
 
@@ -80,6 +85,11 @@ class SimConfig:
     # quantized to bucket boundaries — the documented parity tolerance
     bucket_s: float = 0.25
     traj_backend: str = "numpy"       # "numpy" | "jax" decode-run math
+
+    # observability hook (repro.obs.tracing.ObsConfig); None -> no span
+    # capture, unbounded telemetry buffers (typed loosely like `faults`
+    # to keep this module import-light)
+    obs: Optional[object] = None
 
     def setup_for(self, rid: int, hardware: Optional[str] = None
                   ) -> ServingSetup:
@@ -304,6 +314,12 @@ class SimResult:
     # rid -> hardware profile name; heterogeneous fleets use this to
     # attribute steps/requests to the hardware that served them
     replica_hw: Dict[int, str] = dataclasses.field(default_factory=dict)
+    # observability (cfg.obs): span table, ring-buffer drop accounting,
+    # and lossless step aggregates that survive any sample dropping
+    spans: Optional[object] = None    # repro.obs.tracing.SpanTable
+    steps_dropped: int = 0            # step records evicted by the ring cap
+    faults_dropped: int = 0           # fault events evicted by the ring cap
+    step_totals: Optional[Dict[str, float]] = None  # n/busy_s/tokens_out
 
     @property
     def hardware_names(self) -> Tuple[str, ...]:
@@ -378,6 +394,17 @@ class SimResult:
         return np.array([float("inf") if (r.shed or r.first_token_s is None)
                          else r.ttft_s for r in self.records], np.float64)
 
+    def _tenant_arrays(self):
+        """(tenant, oo, completed, shed, retries) columns feeding the
+        shared rollup; the fleet result overrides this with its raw
+        arrays instead of materializing records."""
+        recs = self.records
+        return (np.array([r.tenant for r in recs], object),
+                np.array([r.oo for r in recs], np.int64),
+                np.array([r.completed for r in recs], bool),
+                np.array([r.shed for r in recs], bool),
+                np.array([r.retries for r in recs], np.int64))
+
     def per_tenant(self, slo_map: Optional[Dict[str, float]] = None
                    ) -> Dict[str, Dict[str, float]]:
         """Per-tenant request accounting, TTFT tail and SLO attainment.
@@ -386,36 +413,12 @@ class SimResult:
         ``FleetTraceConfig.slo_map``); tenants absent from the map get
         ``attainment = nan``.  Shed requests count as misses and as inf
         TTFT, exactly like the fleet-wide metrics.  ``goodput_share`` is
-        the tenant's fraction of completed output tokens."""
-        groups: Dict[str, List[RequestRecord]] = {}
-        for r in self.records:
-            groups.setdefault(r.tenant, []).append(r)
-        total_tok = sum(r.oo for r in self.completed)
-        out: Dict[str, Dict[str, float]] = {}
-        for ten in sorted(groups):
-            recs = groups[ten]
-            comp = [r for r in recs if r.completed]
-            vals = np.array(
-                [float("inf") if (r.shed or r.first_token_s is None)
-                 else r.ttft_s for r in recs], np.float64)
-            slo = slo_map.get(ten) if slo_map else None
-            att = (float(np.mean(vals <= slo)) if slo is not None
-                   else float("nan"))
-            tok = sum(r.oo for r in comp)
-            out[ten] = {
-                "n_requests": len(recs),
-                "n_completed": len(comp),
-                "n_shed": sum(1 for r in recs if r.shed),
-                "n_retries": sum(r.retries for r in recs),
-                "ttft_slo_s": float(slo) if slo is not None
-                else float("nan"),
-                "attainment": att,
-                "ttft_p50_s": percentile_with_inf(vals, 50.0),
-                "ttft_p95_s": percentile_with_inf(vals, 95.0),
-                "ttft_p99_s": percentile_with_inf(vals, 99.0),
-                "goodput_share": tok / total_tok if total_tok else 0.0,
-            }
-        return out
+        the tenant's fraction of completed output tokens.  One shared
+        rollup (``repro.obs.metrics.tenant_rollup``) serves both
+        engines."""
+        tenant, oo, completed, shed, retries = self._tenant_arrays()
+        return tenant_rollup(tenant, self._ttft_values(), oo, completed,
+                             shed, retries, slo_map)
 
     def meta_metrics(self, slo_map: Optional[Dict[str, float]] = None
                      ) -> Dict[str, object]:
@@ -455,26 +458,6 @@ class SimResult:
         }
 
 
-def percentile_with_inf(vals: np.ndarray, q: float) -> float:
-    """Linear-interpolation percentile that tolerates an inf mass.
-
-    ``np.percentile`` returns NaN when the quantile straddles infs
-    (inf - inf inside its lerp); the correct answer there is inf, and on
-    finite data this matches numpy exactly."""
-    vals = np.asarray(vals, np.float64)
-    if vals.size == 0:
-        return float("inf")
-    svals = np.sort(vals)
-    pos = (len(svals) - 1) * q / 100.0
-    lo = int(np.floor(pos))
-    frac = pos - lo
-    if frac == 0.0:
-        return float(svals[lo])
-    if not np.isfinite(svals[lo + 1]):
-        return float("inf")
-    return float(svals[lo] * (1.0 - frac) + svals[lo + 1] * frac)
-
-
 class FleetSimulator:
     def __init__(self, trace: Trace, cfg: SimConfig, policy=None):
         self.trace = trace
@@ -499,9 +482,17 @@ class FleetSimulator:
         replicas = [self._new_replica(i)
                     for i in range(max(cfg.n_replicas, 1))]
         records: Dict[int, RequestRecord] = {}
-        steps: List[StepRecord] = []
+        obs_cfg = cfg.obs if (cfg.obs is not None
+                              and getattr(cfg.obs, "enabled", True)) \
+            else None
+        step_cap = getattr(obs_cfg, "max_steps", None)
+        fault_cap = getattr(obs_cfg, "max_fault_events", None)
+        steps: List[StepRecord] = RingLog(step_cap) if step_cap else []
         controls: List[Tuple[float, Action]] = []
-        fault_log: List[FaultEvent] = []
+        fault_log: List[FaultEvent] = RingLog(fault_cap) if fault_cap \
+            else []
+        # lossless step aggregates (survive ring-cap drops)
+        tot_steps, tot_busy, tot_tokens = 0, 0.0, 0
         heap: List[Tuple[float, int, int, object]] = []
         tick = 0
 
@@ -686,6 +677,9 @@ class FleetSimulator:
                 steps.append(StepRecord(t_end=t, replica=r.rid, kind=skind,
                                         bb=toks, duration_s=dur,
                                         tokens_out=toks))
+                tot_steps += 1
+                tot_busy += dur
+                tot_tokens += toks
                 win["tokens"] += toks
                 win["busy"] += dur
                 maybe_start(r)
@@ -769,14 +763,22 @@ class FleetSimulator:
             if not rec.completed and not rec.shed:
                 shed(rec, now, "unserved")
         denom = replica_seconds + failed_seconds
-        return SimResult(records=ordered, steps=steps, sim_end_s=now,
-                         n_events=n_events, replica_seconds=replica_seconds,
-                         controls=controls, t_start=cfg.t_start,
-                         availability=(replica_seconds / denom
-                                       if denom > 0 else 1.0),
-                         fault_log=fault_log,
-                         replica_hw={r.rid: r.setup.hw.name
-                                     for r in replicas})
+        res = SimResult(records=ordered, steps=steps, sim_end_s=now,
+                        n_events=n_events, replica_seconds=replica_seconds,
+                        controls=controls, t_start=cfg.t_start,
+                        availability=(replica_seconds / denom
+                                      if denom > 0 else 1.0),
+                        fault_log=fault_log,
+                        replica_hw={r.rid: r.setup.hw.name
+                                    for r in replicas})
+        res.steps_dropped = getattr(steps, "n_dropped", 0)
+        res.faults_dropped = getattr(fault_log, "n_dropped", 0)
+        res.step_totals = {"n": tot_steps, "busy_s": tot_busy,
+                           "tokens_out": tot_tokens}
+        if obs_cfg is not None:
+            from repro.obs.tracing import record_spans
+            res.spans = record_spans(res, obs_cfg)
+        return res
 
 
 def simulate(trace: Trace, cfg: SimConfig, policy=None,

@@ -1,0 +1,221 @@
+"""Calibration audit: tick accounting, PAV / reliability-curve shape
+(property-tested where hypothesis is installed), the autoscaler and
+online-loop feeds into one unified event log, and the scorecard /
+JSONL export round-trip."""
+import json
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.obs import ObsConfig
+from repro.obs.calibration import (CalEvent, CalibrationAudit, pav,
+                                   reliability_curve)
+from repro.obs.export import scorecard_markdown, write_jsonl
+from repro.obs.metrics import RingLog
+from repro.serving.autoscaler import ALAAutoscaler
+from repro.serving.simulator import Observation
+
+
+# -- tick accounting ---------------------------------------------------------
+
+def test_tick_computes_ape_and_counts():
+    a = CalibrationAudit()
+    ev = a.tick(1.0, predicted=90.0, measured=100.0, confidence=0.8)
+    assert ev.data["ape"] == pytest.approx(10.0)
+    a.tick(2.0, predicted=float("nan"), measured=100.0, confidence=0.1)
+    assert a.counts == {"tick": 2}
+    tk = a.ticks()
+    assert np.isinf(tk["ape"][1])              # nonfinite pred -> inf APE
+    assert tk["t"].tolist() == [1.0, 2.0]
+
+
+def test_event_log_ring_cap_keeps_counts_lossless():
+    a = CalibrationAudit(cfg=ObsConfig(max_cal_events=4))
+    assert isinstance(a.events, RingLog)
+    for i in range(10):
+        a.tick(float(i), predicted=100.0, measured=100.0, confidence=0.5)
+    a.event(10.0, "degradation", reason="backoff")
+    assert len(a.events) == 4
+    assert a.counts == {"tick": 10, "degradation": 1}
+    s = a.summary()
+    assert s["n_events_retained"] == 4
+    assert s["n_events"] == {"degradation": 1, "tick": 10}
+
+
+def test_calevent_to_dict_flat():
+    ev = CalEvent(t=3.0, kind="drift", clock="epoch",
+                  data={"combo": "a/b", "reason": "residual_growth"})
+    d = ev.to_dict()
+    assert d == {"t": 3.0, "kind": "drift", "clock": "epoch",
+                 "combo": "a/b", "reason": "residual_growth"}
+
+
+# -- PAV / reliability curve -------------------------------------------------
+
+def test_pav_monotone_and_mean_preserving_seeded():
+    rng = np.random.default_rng(0)
+    y = rng.normal(size=40)
+    w = rng.uniform(0.5, 3.0, 40)
+    fit = pav(y, w)
+    assert (np.diff(fit) >= -1e-12).all()
+    assert float((fit * w).sum()) == pytest.approx(float((y * w).sum()))
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 60))
+def test_pav_monotone_property(seed, n):
+    rng = np.random.default_rng(seed)
+    fit = pav(rng.normal(size=n), rng.uniform(0.1, 2.0, n))
+    assert (np.diff(fit) >= -1e-12).all()
+
+
+def test_pav_on_sorted_input_is_identity():
+    y = np.array([0.1, 0.2, 0.5, 0.9])
+    np.testing.assert_allclose(pav(y, np.ones(4)), y)
+
+
+def test_reliability_curve_on_calibrated_scores():
+    """High-confidence ticks accurate, low-confidence ones not: the
+    binned curve must recover the upward trend; PAV keeps it monotone
+    even on a noisy sample."""
+    rng = np.random.default_rng(1)
+    conf = rng.uniform(0.0, 1.0, 3000)
+    ok = (rng.random(3000) < conf).astype(float)
+    cur = reliability_curve(conf, ok, n_bins=10, monotone=True)
+    acc = cur["bin_acc"]
+    assert len(acc) == 10 and cur["monotone"]
+    assert all(acc[i] <= acc[i + 1] + 1e-12 for i in range(len(acc) - 1))
+    np.testing.assert_allclose(acc, cur["bin_conf"], atol=0.12)
+    assert sum(cur["bin_n"]) == 3000
+    # anti-calibrated scores come out flat-or-clamped but still monotone
+    bad = reliability_curve(conf, 1.0 - ok, n_bins=10, monotone=True)
+    assert all(np.diff(bad["bin_acc"]) >= -1e-12)
+    assert bad["raw_acc"] != bad["bin_acc"]    # PAV actually acted
+
+
+def test_reliability_curve_drops_empty_bins_and_nonfinite_conf():
+    conf = np.array([0.05, 0.06, 0.95, 0.96, float("nan")])
+    ok = np.array([0.0, 0.0, 1.0, 1.0, 1.0])
+    cur = reliability_curve(conf, ok, n_bins=10)
+    assert len(cur["bin_conf"]) == 2           # only two occupied bins
+    assert sum(cur["bin_n"]) == 4              # NaN conf excluded
+
+
+# -- autoscaler feed ---------------------------------------------------------
+
+class _StubALA:
+    """Duck-typed ALA: fixed per-request throughput, no error model
+    (the fallback branch), so control() runs without a fit."""
+    error_model = None
+    sa_log = None
+
+    def predict(self, ii, oo, bb):
+        return np.full(len(np.atleast_1d(ii)), 500.0)
+
+
+def _obs(now, measured=400.0, window=5.0):
+    return Observation(
+        now=now, window_s=window, n_arrivals=10, mean_ii=256.0,
+        mean_oo=64.0, arrival_rate=2.0, queue_len=3, n_running=8,
+        n_active_replicas=2, batch_cap=32, decode_tokens=2000,
+        busy_s=5.0, measured_tok_s=measured)
+
+
+def test_autoscaler_obs_config_builds_audit_and_ticks():
+    sc = ALAAutoscaler(ala=_StubALA(), obs=ObsConfig())
+    assert sc.audit is not None
+    for i in range(4):
+        sc.control(_obs(float(i + 1) * 5.0))
+    assert sc.audit.counts["tick"] == 4
+    tk = sc.audit.ticks()
+    np.testing.assert_allclose(tk["predicted"], 500.0)
+    np.testing.assert_allclose(tk["measured"], 400.0)
+    np.testing.assert_allclose(tk["ape"], 20.0)
+    # no estimate() on the stub -> Alg 7 pred_err stays NaN, not stale
+    assert np.isnan(tk["pred_err"]).all()
+
+
+def test_autoscaler_degradation_reaches_audit():
+    sc = ALAAutoscaler(ala=_StubALA(), obs=ObsConfig())
+    sc.control(_obs(1.0, window=0.0))          # collapsed control window
+    assert sc.degradations and sc.degradations[0][1] == "zero_window"
+    assert sc.audit.counts.get("degradation") == 1
+    ev = [e for e in sc.audit.events if e.kind == "degradation"][0]
+    assert ev.data["reason"] == "zero_window"
+
+
+def test_autoscaler_max_log_entries_caps_diagnostics():
+    sc = ALAAutoscaler(ala=_StubALA(),
+                       obs=ObsConfig(max_log_entries=3))
+    for i in range(8):
+        sc.control(_obs(float(i + 1) * 5.0))
+    assert isinstance(sc.log, RingLog)
+    assert len(sc.log) == 3 and sc.log.n_total == 8
+
+
+def test_autoscaler_explicit_audit_shared():
+    audit = CalibrationAudit()
+    sc = ALAAutoscaler(ala=_StubALA(), audit=audit)
+    sc.control(_obs(5.0))
+    assert audit.counts["tick"] == 1           # no ObsConfig needed
+
+
+# -- online-loop feed --------------------------------------------------------
+
+def test_ingest_report_folds_into_epoch_clock():
+    from repro.core.online import DriftSignal, RefitReport
+    audit = CalibrationAudit()
+    sig = DriftSignal(combo=("m", "a"), n_rows=8, confidence=0.4,
+                      pred_err=30.0, resid_ape=80.0, drifted=True,
+                      reason="residual_growth")
+    calm = DriftSignal(combo=("m", "b"), n_rows=8, confidence=0.9,
+                       pred_err=5.0, resid_ape=6.0, drifted=False,
+                       reason="")
+    rep = RefitReport(epoch=3, n_rows=16, changed=[("m", "a"), ("m", "b")],
+                      refit=[("m", "a")], skipped=[("m", "b")],
+                      drift={("m", "a"): sig, ("m", "b"): calm},
+                      registry_s=0.1, uncertainty_s=0.2, wall_s=0.3,
+                      n_quarantined=4)
+    audit.ingest_report(rep)
+    assert audit.counts == {"drift": 1, "quarantine": 1, "refit": 1}
+    evs = list(audit.events)
+    assert all(e.clock == "epoch" and e.t == 3.0 for e in evs)
+    drift = next(e for e in evs if e.kind == "drift")
+    assert drift.data["combo"] == "m/a"
+    assert drift.data["reason"] == "residual_growth"
+    ref = next(e for e in evs if e.kind == "refit")
+    assert ref.data["n_changed"] == 2 and ref.data["n_refit"] == 1
+
+
+def test_online_ala_audit_hook_forwards_reports():
+    """OnlineALA(audit=...) mirrors every ingest into the audit without
+    touching the report itself."""
+    import inspect
+
+    from repro.core.online import OnlineALA
+    assert "audit" in inspect.signature(OnlineALA.__init__).parameters
+    src = inspect.getsource(OnlineALA.ingest)
+    assert "ingest_report" in src
+
+
+# -- export round-trip -------------------------------------------------------
+
+def test_audit_jsonl_and_scorecard(tmp_path):
+    a = CalibrationAudit()
+    for i in range(20):
+        conf = i / 20.0
+        err = 5.0 if conf > 0.5 else 60.0
+        a.tick(float(i), predicted=100.0 + err, measured=100.0,
+               confidence=conf)
+    a.event(21.0, "degradation", reason="backoff")
+    path = tmp_path / "events.jsonl"
+    assert write_jsonl(a.events, path) == 21
+    back = [json.loads(ln) for ln in path.read_text().splitlines()]
+    assert sum(1 for d in back if d["kind"] == "tick") == 20
+    s = a.summary()
+    assert s["accuracy_rate"] == pytest.approx(0.45)  # conf <= 0.5 inacc
+    card = scorecard_markdown(calibration=s, title="t")
+    assert "accuracy_rate" in card and "Reliability curve" in card
+    acc = s["reliability"]["bin_acc"]
+    assert all(acc[i] <= acc[i + 1] + 1e-12 for i in range(len(acc) - 1))

@@ -1,0 +1,265 @@
+"""Metrics layer: fixed-bin contract vs the uncertainty bank, mergeable
+histograms (property-tested where hypothesis is installed, seeded
+otherwise), ring logs, and the serving re-export surface."""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core.uncertainty import FEATS, _bank_edges
+from repro.obs.metrics import (Counter, Gauge, RingLog, StreamHist,
+                               bucketize, fixed_edges, percentile_with_inf,
+                               tenant_rollup)
+
+
+# -- fixed-bin contract vs uncertainty._bank_edges ---------------------------
+
+def test_fixed_edges_match_bank_edges_per_feature():
+    """fixed_edges(lo, hi, B, log=...) must reproduce _bank_edges for
+    every feature given the same value range — one binning contract."""
+    rng = np.random.default_rng(0)
+    ii = rng.integers(64, 4096, 50).astype(np.float64)
+    oo = rng.integers(16, 512, 50).astype(np.float64)
+    bb = rng.integers(1, 64, 50).astype(np.float64)
+    thpt = rng.uniform(100.0, 9000.0, 50)
+    n_bins = 24
+    bank = _bank_edges((ii, oo, bb, thpt), n_bins)
+    cols = dict(zip(FEATS, (ii, oo, bb, thpt)))
+    for fi, f in enumerate(FEATS):
+        v = cols[f]
+        mine = fixed_edges(v.min(), v.max(), n_bins, log=(f != "thpt"))
+        np.testing.assert_array_equal(mine, bank[fi], err_msg=f)
+
+
+def test_fixed_edges_boundary_bins_reserved():
+    e = fixed_edges(1.0, 100.0, 16, log=True)
+    vals = np.linspace(1.0, 100.0, 200)
+    bins = bucketize(vals, e)
+    assert bins.min() >= 1 and bins.max() <= 14
+    assert bucketize([0.5], e)[0] == 0          # below range
+    assert bucketize([150.0], e)[0] == 15       # above range
+
+
+def test_fixed_edges_rejects_tiny_bin_count():
+    with pytest.raises(ValueError):
+        fixed_edges(0.0, 1.0, 2)
+
+
+# -- percentile_with_inf (the shared exact percentile) -----------------------
+
+def test_percentile_with_inf_matches_numpy_on_finite():
+    rng = np.random.default_rng(1)
+    v = rng.exponential(2.0, 257)
+    for q in (0.0, 12.5, 50.0, 95.0, 99.0, 100.0):
+        assert percentile_with_inf(v, q) \
+            == pytest.approx(float(np.percentile(v, q)))
+
+
+def test_percentile_with_inf_inf_mass():
+    v = np.array([0.1, 0.2, np.inf, np.inf])
+    assert percentile_with_inf(v, 25.0) == pytest.approx(0.175)
+    assert percentile_with_inf(v, 95.0) == float("inf")
+    assert percentile_with_inf(np.array([]), 50.0) == float("inf")
+
+
+# -- StreamHist: seeded invariants -------------------------------------------
+
+def _rand_vals(rng, n):
+    v = rng.exponential(1.0, n)
+    v[rng.random(n) < 0.1] = np.inf
+    v[rng.random(n) < 0.03] = np.nan
+    return v
+
+
+def test_hist_merge_order_invariance_seeded():
+    rng = np.random.default_rng(2)
+    shards = [_rand_vals(rng, 200) for _ in range(5)]
+    h = StreamHist.from_range(0.0, 8.0, 32)
+    parts = []
+    for s in shards:
+        p = h.copy()
+        p.observe(s)
+        parts.append(p)
+    fwd = StreamHist.merged(parts)
+    rev = StreamHist.merged(parts[::-1])
+    np.testing.assert_array_equal(fwd.counts, rev.counts)
+    assert fwd.n_inf == rev.n_inf and fwd.n_nan == rev.n_nan
+    for q in (10.0, 50.0, 95.0):
+        assert fwd.quantile(q) == rev.quantile(q)
+
+
+def test_hist_shard_merge_equals_whole_stream_seeded():
+    """Per-shard hists merged == one hist over the concatenated stream
+    (identical counts), and the histogram quantile tracks the exact
+    percentile within one bin width on the finite mass."""
+    rng = np.random.default_rng(3)
+    shards = [_rand_vals(rng, 300) for _ in range(4)]
+    allv = np.concatenate(shards)
+    fin = allv[np.isfinite(allv)]
+    lo, hi = float(fin.min()), float(fin.max())
+    n_bins = 48
+    whole = StreamHist.from_range(lo, hi, n_bins)
+    whole.observe(allv)
+    parts = []
+    for s in shards:
+        p = StreamHist.from_range(lo, hi, n_bins)
+        p.observe(s)
+        parts.append(p)
+    merged = StreamHist.merged(parts)
+    np.testing.assert_array_equal(merged.counts, whole.counts)
+    assert merged.total == whole.total
+    bin_w = (hi - lo) / (n_bins - 2)
+    # NaN carries no histogram mass, so the exact reference must also
+    # exclude it (np.sort would rank NaN above +inf otherwise)
+    massv = allv[~np.isnan(allv)]
+    for q in (25.0, 50.0, 75.0):
+        exact = percentile_with_inf(massv, q)
+        if np.isfinite(exact):
+            assert abs(merged.quantile(q) - exact) <= bin_w + 1e-9
+
+
+def test_hist_inf_nan_mass_accounting():
+    h = StreamHist.from_range(0.0, 1.0, 16)
+    h.observe([0.5, np.inf, np.inf, -np.inf, np.nan, 0.2])
+    assert h.n_inf == 2.0 and h.n_neg_inf == 1.0 and h.n_nan == 1.0
+    assert h.counts.sum() == 2.0
+    assert h.total == 5.0                      # NaN carries no mass
+    # >half the mass at -inf pulls low quantiles to -inf; the +inf
+    # tail owns the top ranks
+    assert h.quantile(10.0) == float("-inf")
+    assert h.quantile(99.0) == float("inf")
+
+
+def test_hist_shed_heavy_run_cannot_report_rosy_p95():
+    h = StreamHist.from_range(0.0, 1.0, 16)
+    h.observe(np.full(50, 0.1))
+    h.observe(np.full(50, np.inf))             # half the traffic shed
+    assert h.quantile(95.0) == float("inf")
+    assert np.isfinite(h.quantile(40.0))
+
+
+def test_hist_merge_rejects_mismatched_edges():
+    a = StreamHist.from_range(0.0, 1.0, 16)
+    b = StreamHist.from_range(0.0, 2.0, 16)
+    with pytest.raises(ValueError):
+        a.merge(b)
+
+
+# -- StreamHist: hypothesis properties ---------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       n_shards=st.integers(2, 6),
+       n_bins=st.integers(8, 64))
+def test_hist_merge_order_invariance_property(seed, n_shards, n_bins):
+    rng = np.random.default_rng(seed)
+    shards = [_rand_vals(rng, int(rng.integers(1, 120)))
+              for _ in range(n_shards)]
+    parts = []
+    for s in shards:
+        p = StreamHist.from_range(0.0, 6.0, n_bins)
+        p.observe(s)
+        parts.append(p)
+    perm = rng.permutation(n_shards)
+    a = StreamHist.merged(parts)
+    b = StreamHist.merged([parts[i] for i in perm])
+    np.testing.assert_array_equal(a.counts, b.counts)
+    assert (a.n_inf, a.n_neg_inf, a.n_nan) \
+        == (b.n_inf, b.n_neg_inf, b.n_nan)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       q=st.floats(1.0, 99.0))
+def test_hist_quantile_within_bin_width_property(seed, q):
+    rng = np.random.default_rng(seed)
+    v = rng.gamma(2.0, 1.5, 500)
+    h = StreamHist.from_values(v, 48)
+    exact = percentile_with_inf(v, q)
+    bin_w = (v.max() - v.min()) / 46.0
+    assert abs(h.quantile(q) - exact) <= bin_w + 1e-9
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       inf_frac=st.floats(0.0, 0.9))
+def test_hist_inf_mass_property(seed, inf_frac):
+    rng = np.random.default_rng(seed)
+    n = 200
+    v = rng.exponential(1.0, n)
+    inf_mask = rng.random(n) < inf_frac
+    v[inf_mask] = np.inf
+    h = StreamHist.from_values(v, 32)
+    assert h.n_inf == float(inf_mask.sum())
+    assert h.total == float(n)
+    # any rank inside the inf mass must report inf, matching the exact
+    # percentile's miss convention
+    for q in (50.0, 95.0):
+        assert np.isfinite(h.quantile(q)) \
+            == np.isfinite(percentile_with_inf(v, q))
+
+
+# -- Counter / Gauge ---------------------------------------------------------
+
+def test_counter_and_gauge_merge():
+    a, b = Counter(), Counter()
+    a.inc(3)
+    b.inc(4)
+    assert a.merge(b).value == 7
+    g, h = Gauge(), Gauge()
+    for v in (1.0, 5.0):
+        g.set(v)
+    h.set(-2.0)
+    g.merge(h)
+    assert g.n == 3 and g.min == -2.0 and g.max == 5.0
+    assert g.mean == pytest.approx(4.0 / 3.0)
+    assert Gauge().mean != Gauge().mean      # NaN when empty
+
+
+# -- RingLog -----------------------------------------------------------------
+
+def test_ringlog_caps_but_counts_losslessly():
+    log = RingLog(5)
+    log.extend(range(12))
+    assert len(log) == 5
+    assert list(log) == [7, 8, 9, 10, 11]
+    assert log.n_total == 12 and log.n_dropped == 7
+    assert log[0] == 7 and log[-1] == 11 and log[1:3] == [8, 9]
+    log.clear()
+    assert len(log) == 0 and log.n_total == 12
+
+
+def test_ringlog_wraps_existing_list():
+    log = RingLog(3, [1, 2, 3, 4])
+    assert list(log) == [2, 3, 4] and log.n_total == 4
+
+
+def test_ringlog_rejects_zero_cap():
+    with pytest.raises(ValueError):
+        RingLog(0)
+
+
+# -- serving re-export + rollup parity ---------------------------------------
+
+def test_percentile_reexported_from_serving_simulator():
+    """Moved helper stays importable from its old home."""
+    from repro.serving.simulator import percentile_with_inf as old
+    assert old is percentile_with_inf
+
+
+def test_tenant_rollup_counts_and_miss_convention():
+    tenant = np.array(["a", "a", "b", "b", "b"], object)
+    ttft = np.array([0.1, np.inf, 0.2, 0.3, np.inf])
+    oo = np.array([10, 20, 30, 40, 50])
+    completed = np.array([True, False, True, True, False])
+    shed = np.array([False, True, False, False, True])
+    retries = np.array([0, 1, 0, 2, 0])
+    out = tenant_rollup(tenant, ttft, oo, completed, shed, retries,
+                        slo_map={"a": 1.0})
+    a, b = out["a"], out["b"]
+    assert a["n_requests"] == 2 and a["n_shed"] == 1
+    assert a["attainment"] == pytest.approx(0.5)
+    assert a["ttft_p95_s"] == float("inf")     # shed mass surfaces
+    assert np.isnan(b["attainment"])           # tenant without an SLO
+    assert b["n_retries"] == 2
+    assert a["goodput_share"] + b["goodput_share"] == pytest.approx(1.0)
+    assert a["goodput_share"] == pytest.approx(10.0 / 80.0)

@@ -1,0 +1,200 @@
+"""Span tracing: column derivation from both engines, heap-vs-fleet
+span parity, deterministic hash sampling, ring caps with lossless step
+totals, and chrome-trace well-formedness.  The strict <5% overhead gate
+at full sampling runs full-size in ``benchmarks/run.py obs_engine``."""
+import json
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.configs import get_config
+from repro.obs import ObsConfig
+from repro.obs.export import chrome_trace, spans_to_dicts, write_jsonl
+from repro.obs.tracing import (_keep_mask, queue_depth_series, record_spans,
+                               span_hists, span_stats)
+from repro.perfmodel.simulator import ServingSetup
+from repro.perfmodel.hardware import TPU_V5E
+from repro.serving.simulator import SimConfig, simulate
+from repro.serving.traces import (FleetTraceConfig, TenantConfig,
+                                  TraceConfig, make_fleet_trace,
+                                  make_trace, mix)
+
+BUCKET_S = 0.1
+
+
+@pytest.fixture(scope="module")
+def setup():
+    return ServingSetup(cfg=get_config("llama3.1-8b"), hw=TPU_V5E, chips=4)
+
+
+@pytest.fixture(scope="module")
+def fleet_trace():
+    return make_fleet_trace(FleetTraceConfig(tenants=(
+        TenantConfig(name="chat",
+                     trace=TraceConfig(arrival="poisson", rate=6.0,
+                                       shape_mix=mix(("chat", 1.0))),
+                     ttft_slo_s=1.5),
+        TenantConfig(name="generate",
+                     trace=TraceConfig(arrival="mmpp", rate=3.0,
+                                       burst_rate=8.0,
+                                       shape_mix=mix(("generate", 1.0))),
+                     ttft_slo_s=4.0),
+    ), horizon_s=30.0, seed=7))
+
+
+def _cfg(setup, **kw):
+    kw.setdefault("obs", ObsConfig())
+    return SimConfig(setup=setup, bucket_s=BUCKET_S, n_replicas=2,
+                     batch_cap=32, **kw)
+
+
+# -- span derivation ---------------------------------------------------------
+
+def test_heap_spans_match_records(setup, fleet_trace):
+    res = simulate(fleet_trace, _cfg(setup), engine="heap")
+    t = res.spans
+    assert t is not None and t.n == len(res.records)
+    recs = {r.rid: r for r in res.records}
+    for i in range(t.n):
+        r = recs[int(t.rid[i])]
+        assert str(t.tenant[i]) == r.tenant
+        assert int(t.oo[i]) == r.oo
+        assert bool(t.shed[i]) == r.shed
+        if r.first_token_s is None:
+            assert np.isnan(t.first_token_s[i])
+        else:
+            assert t.first_token_s[i] == pytest.approx(r.first_token_s)
+    ttft = t.ttft_s()
+    assert np.isinf(ttft[t.shed]).all()        # miss convention
+
+
+def test_span_parity_heap_vs_fleet(setup, fleet_trace):
+    h = simulate(fleet_trace, _cfg(setup), engine="heap")
+    f = simulate(fleet_trace, _cfg(setup), engine="fleet")
+    sh, sf = span_stats(h.spans), span_stats(f.spans)
+    for k in ("n_spans", "n_source", "n_completed", "n_shed",
+              "n_retries", "out_tokens", "shed_by_reason"):
+        assert sh[k] == sf[k], (k, sh[k], sf[k])
+    # fleet admissions quantize to bucket boundaries
+    for k, tol in (("ttft_p50_s", BUCKET_S + 0.35),
+                   ("ttft_p95_s", BUCKET_S + 1.0),
+                   ("e2e_p50_s", BUCKET_S + 0.35)):
+        if np.isfinite(sh[k]) or np.isfinite(sf[k]):
+            assert abs(sh[k] - sf[k]) <= tol, (k, sh[k], sf[k])
+
+
+def test_sampling_deterministic_and_engine_independent(setup, fleet_trace):
+    obs = ObsConfig(sample_rate=0.4, sample_seed=3)
+    h = simulate(fleet_trace, _cfg(setup, obs=obs), engine="heap")
+    f = simulate(fleet_trace, _cfg(setup, obs=obs), engine="fleet")
+    assert set(h.spans.rid.tolist()) == set(f.spans.rid.tolist())
+    assert h.spans.n_source == len(fleet_trace)
+    assert 0 < h.spans.n < len(fleet_trace)
+    # a different seed keeps a different subset
+    g = record_spans(h, ObsConfig(sample_rate=0.4, sample_seed=4))
+    assert set(g.rid.tolist()) != set(h.spans.rid.tolist())
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), rate=st.floats(0.05, 0.95))
+def test_keep_mask_rate_property(seed, rate):
+    rid = np.arange(4000, dtype=np.int64)
+    m = _keep_mask(rid, rate, seed)
+    assert abs(m.mean() - rate) < 0.05
+    np.testing.assert_array_equal(
+        m, _keep_mask(rid[::-1], rate, seed)[::-1])   # order independent
+
+
+def test_obs_disabled_or_absent_records_no_spans(setup, fleet_trace):
+    res = simulate(fleet_trace,
+                   SimConfig(setup=setup, bucket_s=BUCKET_S, n_replicas=2),
+                   engine="fleet")
+    assert res.spans is None and res.steps_dropped == 0
+    res = simulate(fleet_trace,
+                   _cfg(setup, obs=ObsConfig(enabled=False)),
+                   engine="fleet")
+    assert res.spans is None
+
+
+# -- ring caps + lossless totals ---------------------------------------------
+
+@pytest.mark.parametrize("engine", ["heap", "fleet"])
+def test_step_ring_cap_lossless_totals(setup, fleet_trace, engine):
+    full = simulate(fleet_trace, _cfg(setup), engine=engine)
+    capped = simulate(
+        fleet_trace, _cfg(setup, obs=ObsConfig(max_steps=100,
+                                               max_fault_events=50)),
+        engine=engine)
+    assert len(capped.steps) == 100
+    assert capped.steps_dropped == len(full.steps) - 100
+    # totals survive the drop — accounting never truncates
+    assert capped.step_totals == full.step_totals
+    assert full.step_totals["n"] == len(full.steps)
+    assert full.step_totals["busy_s"] == pytest.approx(
+        sum(s.duration_s for s in full.steps))
+    # the retained window is the most recent steps
+    assert capped.steps[-1].t_end == pytest.approx(full.steps[-1].t_end)
+    # per-request outcomes are untouched by telemetry caps
+    assert span_stats(capped.spans) == span_stats(full.spans)
+
+
+# -- derived views -----------------------------------------------------------
+
+def test_span_hists_shards_merge_to_fleet_view(setup, fleet_trace):
+    res = simulate(fleet_trace, _cfg(setup), engine="fleet")
+    t = res.spans
+    from repro.obs.metrics import StreamHist, percentile_with_inf
+    shards = span_hists(t, n_bins=32, by=t.tenant)
+    assert set(shards) == {"chat", "generate"}
+    merged = StreamHist.merged(shards.values())
+    assert merged.total == t.n
+    ttft = t.ttft_s()
+    assert np.isfinite(merged.quantile(50.0)) \
+        == np.isfinite(percentile_with_inf(ttft, 50.0))
+
+
+def test_queue_depth_series_bounds(setup, fleet_trace):
+    res = simulate(fleet_trace, _cfg(setup), engine="fleet")
+    qd = queue_depth_series(res.spans, bucket_s=0.5,
+                            t_end=res.sim_end_s)
+    assert (qd["depth"] >= 0).all()
+    assert len(qd["t_s"]) == len(qd["depth"])
+    assert qd["depth"].max() <= res.spans.n
+
+
+# -- export ------------------------------------------------------------------
+
+def test_chrome_trace_well_formed(setup, fleet_trace, tmp_path):
+    res = simulate(fleet_trace, _cfg(setup), engine="fleet")
+    doc = chrome_trace(res, max_step_events=500, max_span_events=100)
+    evs = doc["traceEvents"]
+    assert evs and doc["displayTimeUnit"] == "ms"
+    assert doc["metadata"]["n_steps_emitted"] <= 500
+    assert doc["metadata"]["n_spans_total"] == res.spans.n
+    phases = {e["ph"] for e in evs}
+    assert {"X", "M", "b", "e"} <= phases
+    for e in evs:
+        assert "ph" in e and "pid" in e
+        if e["ph"] != "M":
+            assert np.isfinite(e["ts"]) and e["ts"] >= 0.0
+        if e["ph"] == "X":
+            assert e["dur"] >= 1.0             # >= 1us, renderable
+    # async begin/end pairs balance per id
+    b = sorted(e["id"] for e in evs if e["ph"] == "b")
+    ee = sorted(e["id"] for e in evs if e["ph"] == "e")
+    assert b == ee
+    json.dumps(doc)                            # serializable as-is
+
+
+def test_spans_jsonl_roundtrip(setup, fleet_trace, tmp_path):
+    res = simulate(fleet_trace, _cfg(setup), engine="fleet")
+    dicts = spans_to_dicts(res.spans)
+    path = tmp_path / "spans.jsonl"
+    assert write_jsonl(dicts, path) == res.spans.n
+    back = [json.loads(ln) for ln in path.read_text().splitlines()]
+    assert len(back) == res.spans.n
+    assert {d["rid"] for d in back} == set(res.spans.rid.tolist())
+    for d in back:
+        if d["shed"]:
+            assert "shed_reason" in d and "done_s" not in d
