@@ -657,6 +657,7 @@ def fleet_engine(smoke=None):
     from repro.serving.simulator import SimConfig, simulate
     from repro.serving.traces import (FleetTraceConfig, TenantConfig,
                                       TraceConfig, make_fleet_trace, mix)
+    from repro.staticcheck.tracers import assert_max_compiles
 
     smoke = OPTS["smoke"] if smoke is None else smoke
     # the committed full-run heap baseline (BENCH_serving.json): the
@@ -687,9 +688,15 @@ def fleet_engine(smoke=None):
 
     cfg = SimConfig(setup=setup, batch_cap=64, n_replicas=8,
                     max_replicas=8, bucket_s=0.5)
-    # best-of-2: the first run pays numpy/caching warm-up
+    # best-of-2: the first run pays numpy/caching warm-up.  The timed
+    # rerun is also the pow2 shape-bucketing gate: every shape bucket
+    # was compiled by the warm run, so a steady-state replay may not
+    # trigger a single XLA compile (smoke hard-gates; the full run
+    # records the count in the artifact)
     res, us = _timed(simulate, tr, cfg, engine="fleet")
-    res, us2 = _timed(simulate, tr, cfg, engine="fleet")
+    with assert_max_compiles(0 if smoke else None,
+                             label="fleet_engine post-warmup") as cgate:
+        res, us2 = _timed(simulate, tr, cfg, engine="fleet")
     us = min(us, us2)
     evps = res.n_events / (us / 1e6)
 
@@ -726,7 +733,10 @@ def fleet_engine(smoke=None):
         "per_tenant": {t: {"n": m["n_requests"],
                            "attainment": m["attainment"],
                            "goodput_share": m["goodput_share"]}
-                       for t, m in meta["per_tenant"].items()}}
+                       for t, m in meta["per_tenant"].items()},
+        "compiles_post_warmup": cgate.count,
+        "compile_gate": {"limit": cgate.limit,
+                         "available": cgate.available}}
     # hard gates: full runs must clear the ISSUE's 50x floor against
     # the committed heap numbers; smoke runs (CI boxes, tiny horizon)
     # gate on an absolute events/s floor instead
@@ -771,6 +781,7 @@ def online_engine(smoke=None):
     from repro.serving.simulator import SimConfig, simulate
     from repro.serving.traces import TraceConfig, make_trace, mix
     from repro.core.dataset import Dataset
+    from repro.staticcheck.tracers import assert_max_compiles, nan_guard
 
     smoke = OPTS["smoke"] if smoke is None else smoke
     archs = ("llama3.1-8b",) if smoke else ("llama3.1-8b", "qwen2.5-32b")
@@ -844,6 +855,8 @@ def online_engine(smoke=None):
                    "refit": len(rep0.refit), "skipped": len(rep0.skipped),
                    "drifted": 0}]
     inc_refit = scratch_refit = 0.0     # epochs >= 1: the refit loop
+    epoch_compiles: list = []           # XLA compiles per refit epoch
+    compile_budget = None               # set by the first measured epoch
 
     for e in range(n_epochs):
         deltas = []
@@ -869,8 +882,18 @@ def online_engine(smoke=None):
         delta = deltas[0]
         for d in deltas[1:]:
             delta = delta.concat(d)
-        rep, us_i = _timed(eng.ingest, delta, **gbt_kw)
-        (reg_s, full), us_s = _timed(scratch_fit)
+        # pow2 shape-bucketing gate: after the first measured epoch
+        # sets the budget, no later epoch may compile more XLA
+        # programs than it did (+2 slack for pow2 bucket crossings as
+        # the data grows).  Smoke hard-gates; the full run records the
+        # per-epoch counts in the artifact instead.
+        with assert_max_compiles(compile_budget if smoke else None,
+                                 label=f"online epoch {e + 1}") as cr:
+            rep, us_i = _timed(eng.ingest, delta, **gbt_kw)
+            (reg_s, full), us_s = _timed(scratch_fit)
+        epoch_compiles.append(cr.count)
+        if compile_budget is None and cr.available:
+            compile_budget = cr.count + 2
         inc_wall += us_i / 1e6
         scratch_wall += us_s / 1e6
         inc_refit += us_i / 1e6
@@ -882,9 +905,11 @@ def online_engine(smoke=None):
             "skipped": len(rep.skipped),
             "drifted": sum(1 for d in rep.drift.values() if d.drifted)})
 
-    # parity on the serving path over every ingested row
-    p_inc = eng.predict(full)
-    p_scr = reg_s.predict(full)
+    # parity on the serving path over every ingested row; nan_guard is
+    # the runtime half of the contract checker — a NaN in either
+    # predict path fails the benchmark with the offending leaf named
+    p_inc = nan_guard(eng.predict, label="online.predict")(full)
+    p_scr = nan_guard(reg_s.predict, label="scratch.predict")(full)
     parity = float(np.abs(p_inc - p_scr).max())
     med_inc = median_ape(full["thpt"].astype(np.float64), p_inc)
     med_scr = median_ape(full["thpt"].astype(np.float64), p_scr)
@@ -907,6 +932,8 @@ def online_engine(smoke=None):
         "mean_confidence_incremental": float(np.mean(conf_inc)),
         "recalibration_requests": sum(len(s.recalibrations)
                                       for s in scalers.values()),
+        "epoch_compiles": epoch_compiles,
+        "compile_budget": compile_budget,
         "epochs": epochs_out,
     }
     key = "online_engine_smoke" if smoke else "online_engine"

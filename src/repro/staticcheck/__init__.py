@@ -1,0 +1,21 @@
+"""repro-check: contract-aware static analysis for the ALA stack.
+
+``python -m repro.staticcheck [--format=github] [paths]`` runs the
+AST rule engine (engine.py) with the repo's contract rules (rules/)
+over every ``*.py`` under the given paths (default: ``src``
+``benchmarks``) and exits non-zero on any finding.  The sibling
+``tracers`` module holds the *runtime* side of the same contracts:
+``assert_max_compiles`` (XLA recompile gates for the pow2
+shape-bucketing contract) and ``nan_guard``.
+
+See docs/static_analysis.md for the rule catalog and suppression
+syntax (``# repro-check: disable=<rule>``).
+"""
+from repro.staticcheck.engine import (CheckResult, Finding, Rule,
+                                      check_paths, check_source)
+from repro.staticcheck.rules import ALL_RULES, RULES_BY_NAME
+
+__all__ = [
+    "Finding", "Rule", "CheckResult", "check_source", "check_paths",
+    "ALL_RULES", "RULES_BY_NAME",
+]

@@ -1,0 +1,48 @@
+"""banned-solve: dense ``linalg.solve`` outside ``core/fit.py``.
+
+Contract (PR 5): every 3x3 LM solve routes through the closed-form,
+batch-invariant ``repro.core.fit._solve3``.  ``jnp.linalg.solve`` (and
+the numpy/scipy spellings) use pivoted LAPACK paths whose results
+depend on batch composition and backend — which breaks the online
+engine's bit-for-bit "untouched groups reuse their params" refit parity
+(``update_exponential_database``) and the delta-refit regression tests.
+``core/fit.py`` itself is exempt: it owns the one documented
+``np.linalg.solve`` fallback inside the scalar reference path.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.staticcheck.engine import Finding, Rule, dotted_name
+
+_EXEMPT = "src/repro/core/fit.py"
+
+
+class BannedSolve(Rule):
+    name = "banned-solve"
+    description = ("dense linalg.solve outside core/fit.py (use the "
+                   "batch-invariant fit._solve3)")
+    contract = ("batch-invariant LM solves: untouched (ii,oo) groups "
+                "reuse params bit-for-bit across online refits")
+
+    def applies(self, relpath: str) -> bool:
+        return relpath != _EXEMPT
+
+    def check(self, tree: ast.AST, text: str,
+              relpath: str) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = dotted_name(node.func)
+            if chain and chain.endswith(".linalg.solve"):
+                out.append(self.finding(
+                    relpath, node,
+                    f"{chain} is not batch-invariant; route through "
+                    f"repro.core.fit._solve3 (only core/fit.py may "
+                    f"call linalg.solve)"))
+        return out
+
+
+RULE = BannedSolve()

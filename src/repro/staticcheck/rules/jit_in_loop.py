@@ -1,0 +1,85 @@
+"""jit-in-loop: ``jax.jit`` constructed inside a ``for``/``while`` body.
+
+Contract (PR 5): XLA compiles are paid once per (program, shape
+bucket) — the pow2 shape-bucketing idiom exists so growing online data
+reuses compiles.  A ``jax.jit(...)`` (or ``functools.partial(jax.jit,
+...)``) evaluated *syntactically inside a loop body* builds a fresh
+jitted callable every iteration; each carries its own trace cache, so
+every iteration recompiles and ``assert_max_compiles`` gates blow up.
+The repo idiom is a ``_make_*`` factory or module-level closure that
+jits once (``gbt._make_forest_apply``, ``fleet._JaxTraj``).  A
+function *defined* inside the loop shields its own jit calls — they
+run per call, not per iteration — so only the directly-in-loop case
+fires.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List
+
+from repro.staticcheck.engine import Finding, Rule, dotted_name, parent_map
+
+_JIT = {"jax.jit", "jit"}
+_PARTIAL = {"functools.partial", "partial"}
+
+
+def _is_jit_call(node: ast.Call) -> bool:
+    chain = dotted_name(node.func)
+    if chain in _JIT:
+        return True
+    if chain in _PARTIAL and node.args:
+        return dotted_name(node.args[0]) in _JIT
+    return False
+
+
+class JitInLoop(Rule):
+    name = "jit-in-loop"
+    description = ("jax.jit / partial(jax.jit, ...) evaluated inside a "
+                   "for/while body (per-iteration recompile)")
+    contract = ("compile-once jit placement: XLA compiles are paid per "
+                "shape bucket, never per loop iteration")
+
+    def check(self, tree: ast.AST, text: str,
+              relpath: str) -> List[Finding]:
+        out: List[Finding] = []
+        parents: Dict[ast.AST, ast.AST] = parent_map(tree)
+        # jit occurrences: call sites, plus bare `@jax.jit` decorators
+        # (Attribute, not Call) — those execute in the enclosing scope
+        # when the def statement runs, so a decorated def in a loop
+        # body recompiles per iteration just like a call would
+        occurrences: List[ast.AST] = []
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) and _is_jit_call(node):
+                occurrences.append(node)
+            elif isinstance(node, (ast.FunctionDef,
+                                   ast.AsyncFunctionDef)):
+                occurrences.extend(
+                    deco for deco in node.decorator_list
+                    if not isinstance(deco, ast.Call)
+                    and dotted_name(deco) in _JIT)
+        for node in occurrences:
+            child: ast.AST = node
+            cur = parents.get(node)
+            while cur is not None:
+                if isinstance(cur, (ast.FunctionDef,
+                                    ast.AsyncFunctionDef, ast.Lambda)):
+                    # a decorator executes in the enclosing scope, so a
+                    # decorated def inside a loop still jits per
+                    # iteration; anything else inside the def is
+                    # shielded by the function boundary
+                    if child not in getattr(cur, "decorator_list", []):
+                        break
+                elif isinstance(cur, (ast.For, ast.While)):
+                    out.append(self.finding(
+                        relpath, node,
+                        "jax.jit evaluated inside a loop body builds a "
+                        "fresh callable (and trace cache) every "
+                        "iteration; hoist it to a _make_* factory or "
+                        "module level"))
+                    break
+                child = cur
+                cur = parents.get(cur)
+        return out
+
+
+RULE = JitInLoop()

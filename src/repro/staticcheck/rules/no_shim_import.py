@@ -1,0 +1,62 @@
+"""no-shim-import: in-repo imports of the deprecated ``perfmodel.tpu``.
+
+Contract (PR 8): ``repro.perfmodel.tpu`` survives only as a
+DeprecationWarning shim for out-of-tree callers; everything under
+``src/`` imports ``repro.perfmodel.hardware`` directly.  This promotes
+the old grep-based test in ``tests/test_hardware_transfer.py`` into the
+rule engine — same guarantee, one mechanism — and additionally catches
+``importlib.import_module("repro.perfmodel.tpu")`` spellings grep could
+only see as strings.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.staticcheck.engine import Finding, Rule, dotted_name
+
+_SHIM = "repro.perfmodel.tpu"
+_SHIM_FILE = "src/repro/perfmodel/tpu.py"
+_MSG = ("import repro.perfmodel.hardware instead; the tpu module is a "
+        "deprecated out-of-tree shim")
+
+
+class NoShimImport(Rule):
+    name = "no-shim-import"
+    description = ("import of the deprecated repro.perfmodel.tpu shim "
+                   "inside src/")
+    contract = ("single hardware-descriptor module: all in-repo code "
+                "prices against repro.perfmodel.hardware")
+
+    def applies(self, relpath: str) -> bool:
+        return relpath.startswith("src/") and relpath != _SHIM_FILE
+
+    def check(self, tree: ast.AST, text: str,
+              relpath: str) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name == _SHIM or \
+                            alias.name.startswith(_SHIM + "."):
+                        out.append(self.finding(relpath, node, _MSG))
+            elif isinstance(node, ast.ImportFrom):
+                mod = node.module or ""
+                if mod == _SHIM or mod.startswith(_SHIM + "."):
+                    out.append(self.finding(relpath, node, _MSG))
+                elif mod == "repro.perfmodel" and \
+                        any(a.name == "tpu" for a in node.names):
+                    out.append(self.finding(relpath, node, _MSG))
+            elif isinstance(node, ast.Call):
+                chain = dotted_name(node.func)
+                if chain in ("importlib.import_module",
+                             "import_module", "__import__") and \
+                        node.args and \
+                        isinstance(node.args[0], ast.Constant) and \
+                        isinstance(node.args[0].value, str) and \
+                        node.args[0].value.startswith(_SHIM):
+                    out.append(self.finding(relpath, node, _MSG))
+        return out
+
+
+RULE = NoShimImport()

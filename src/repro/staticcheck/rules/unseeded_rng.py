@@ -1,0 +1,118 @@
+"""unseeded-rng: global-state or seedless RNG draws inside ``src/``.
+
+Contract (PRs 4-7): every stochastic stream in the library is an
+explicitly seeded ``np.random.default_rng(seed)`` (or a derived
+``jax.random`` key) — trace generation, fault plans, SA chains, and
+telemetry corruption are all *replayable by construction*, and the
+differential heap-vs-fleet parity suite plus the fault-plan
+``fingerprint()`` determinism gates depend on it.  Three spellings
+break that: legacy ``np.random.<dist>`` global-state calls (shared
+mutable stream), stdlib ``random.*`` module functions (same), and
+``default_rng()`` with no seed argument (fresh OS entropy per call).
+Benchmarks/tests may do what they like; the rule scopes to ``src/``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.staticcheck.engine import Finding, Rule, dotted_name
+
+# np.random members that construct explicit generators/seeds rather
+# than drawing from the legacy global stream
+_NP_CONSTRUCTORS = {
+    "default_rng", "Generator", "SeedSequence", "BitGenerator",
+    "PCG64", "PCG64DXSM", "Philox", "MT19937", "SFC64", "RandomState",
+}
+# stdlib random module functions (module-level = hidden global state)
+_STDLIB_FNS = {
+    "random", "randint", "randrange", "choice", "choices", "shuffle",
+    "sample", "uniform", "gauss", "seed", "betavariate", "expovariate",
+    "normalvariate", "lognormvariate", "triangular", "vonmisesvariate",
+    "paretovariate", "weibullvariate", "getrandbits", "randbytes",
+}
+
+
+def _seedless(node: ast.Call) -> bool:
+    """No positional seed and no seed= keyword, or an explicit None."""
+    if node.args:
+        first = node.args[0]
+        return isinstance(first, ast.Constant) and first.value is None
+    for kw in node.keywords:
+        if kw.arg == "seed":
+            return isinstance(kw.value, ast.Constant) and \
+                kw.value.value is None
+    return True
+
+
+class UnseededRng(Rule):
+    name = "unseeded-rng"
+    description = ("global-state np.random/<stdlib random> draw or "
+                   "seedless default_rng() in src/")
+    contract = ("seed-determinism: traces, fault plans, SA chains, and "
+                "corruption streams replay bit-identically from their "
+                "recorded seeds")
+
+    def applies(self, relpath: str) -> bool:
+        return relpath.startswith("src/")
+
+    def check(self, tree: ast.AST, text: str,
+              relpath: str) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(tree):
+            # bare-name imports make later call sites untraceable:
+            # flag `from random import choice` / `from numpy.random
+            # import normal` at the import
+            if isinstance(node, ast.ImportFrom):
+                if node.module == "random":
+                    for alias in node.names:
+                        if alias.name in _STDLIB_FNS:
+                            out.append(self.finding(
+                                relpath, node,
+                                f"`from random import {alias.name}` "
+                                f"pulls in hidden global RNG state; "
+                                f"use a seeded default_rng"))
+                elif node.module == "numpy.random":
+                    for alias in node.names:
+                        if alias.name not in _NP_CONSTRUCTORS:
+                            out.append(self.finding(
+                                relpath, node,
+                                f"`from numpy.random import "
+                                f"{alias.name}` draws from the global "
+                                f"stream; use a seeded default_rng"))
+                continue
+            if not isinstance(node, ast.Call):
+                continue
+            chain = dotted_name(node.func)
+            if chain is None:
+                continue
+            if chain.startswith(("np.random.", "numpy.random.")):
+                member = chain.rsplit(".", 1)[1]
+                if member in ("default_rng", "RandomState"):
+                    if _seedless(node):
+                        out.append(self.finding(
+                            relpath, node,
+                            f"{chain}() with no seed draws fresh OS "
+                            f"entropy; pass an explicit seed"))
+                elif member not in _NP_CONSTRUCTORS:
+                    out.append(self.finding(
+                        relpath, node,
+                        f"{chain} uses numpy's global RNG stream; draw "
+                        f"from an explicitly seeded "
+                        f"np.random.default_rng(seed)"))
+            elif chain.startswith("random.") and chain.count(".") == 1:
+                member = chain.split(".", 1)[1]
+                if member in _STDLIB_FNS:
+                    out.append(self.finding(
+                        relpath, node,
+                        f"stdlib {chain} uses hidden global state; use "
+                        f"a seeded np.random.default_rng(seed)"))
+            elif chain == "default_rng" and _seedless(node):
+                out.append(self.finding(
+                    relpath, node,
+                    "default_rng() with no seed draws fresh OS entropy; "
+                    "pass an explicit seed"))
+        return out
+
+
+RULE = UnseededRng()

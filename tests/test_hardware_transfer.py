@@ -39,14 +39,16 @@ def test_tpu_shim_warns_and_reexports():
 
 def test_no_in_repo_imports_of_deprecated_shim():
     """Everything under src/ must import repro.perfmodel.hardware; the
-    shim exists only for out-of-tree callers."""
-    offenders = []
-    for path in SRC.rglob("*.py"):
-        if path.name == "tpu.py" and path.parent.name == "perfmodel":
-            continue
-        if "perfmodel.tpu" in path.read_text() \
-                or "perfmodel import tpu" in path.read_text():
-            offenders.append(str(path.relative_to(SRC)))
+    shim exists only for out-of-tree callers.  The old grep over src/
+    is promoted into the repro-check rule engine — same guarantee, one
+    mechanism, and the AST rule also catches ``importlib`` spellings
+    grep could only see as strings."""
+    from repro.staticcheck import RULES_BY_NAME, check_paths
+    res = check_paths([SRC], rules=[RULES_BY_NAME["no-shim-import"]],
+                      root=SRC.parent)
+    assert res.n_files > 50, "shim sweep saw too few files"
+    offenders = [f.format() for f in res.findings
+                 if f.rule == "no-shim-import"]
     assert not offenders, f"deprecated tpu imports remain: {offenders}"
 
 
